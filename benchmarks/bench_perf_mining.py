@@ -1,0 +1,98 @@
+"""§Perf evidence for the mining kernel's structural optimizations.
+
+Measures, on real zone batches (not ShapeDtypeStructs):
+
+1. **live-window block skipping** (kernels/zone_scan): the fraction of
+   (candidate-block x edge-block) grid cells whose index/time tests skip
+   them — the work reduction the 2-D kernel grid buys over the dense
+   O(E^2) sweep of the paper-faithful formulation;
+2. **adaptive zoning** (core/tzp e_cap): padded-batch size with and without
+   the density-adaptive zone shrinking on a bursty stream — zone padding is
+   wasted vector work, so the ratio is a direct work saving;
+3. measured **unique-code populations** per device-shard, validating the
+   hierarchical-merge out_cap used in the dry-run variants.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import tzp
+from repro.data import synthetic_graphs as sg
+
+from .common import csv_row
+
+
+def _skip_fraction(batch, delta, l_max, c_blk=256, e_blk=256):
+    """Fraction of kernel grid cells skipped by the live-window tests."""
+    e = batch.e_cap
+    n_c = -(-e // c_blk)
+    n_e = -(-e // e_blk)
+    zi = np.flatnonzero(batch.valid.any(axis=1))
+    t = batch.t[zi]                                     # [Z, E]
+    c_hi = np.minimum((np.arange(n_c) + 1) * c_blk, e) - 1
+    e_lo = np.minimum(np.arange(n_e) * e_blk, e - 1)
+    index_live = (e_lo[None, :] + e_blk - 1) >= (
+        np.arange(n_c)[:, None] * c_blk)                # [C, E]
+    time_live = (
+        t[:, e_lo][:, None, :] <= t[:, c_hi][:, :, None] + l_max * delta
+    )                                                    # [Z, C, E]
+    live = (index_live[None] & time_live).sum()
+    total = len(zi) * n_c * n_e
+    return 1.0 - live / max(total, 1)
+
+
+def run() -> list[str]:
+    rows = []
+    delta, l_max = 90, 5
+
+    # 1) live-window skipping on two regimes (bursts big enough that a
+    #    zone spans many kernel blocks)
+    for name, gen in (("bursty", sg.bursty_stream(
+                          30_000, 300, burst_size=2_000, burst_span=900,
+                          gap_span=20_000, seed=2)),
+                      ("poisson", sg.poisson_stream(20_000, 500, rate=0.5,
+                                                    seed=2))):
+        plan = tzp.plan_zones(gen, delta=delta, l_max=l_max, omega=20)
+        batch = tzp.build_zone_batch(gen, plan)
+        frac = _skip_fraction(batch, delta, l_max)
+        rows.append(csv_row(
+            f"perf_mining/skip_fraction/{name}", 0.0,
+            f"omega=20;skipped={frac:.1%};work_reduction="
+            f"{1/(1-frac) if frac < 1 else 0:.1f}x",
+        ))
+
+    # 2) adaptive zoning on a heavy-burst stream
+    # bursts longer than 2*L_b so the adaptive planner can split them
+    g = sg.bursty_stream(30_000, 200, burst_size=3_000, burst_span=5_000,
+                         gap_span=36_000, seed=4)
+    plan_fixed = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=20)
+    b_fixed = tzp.build_zone_batch(g, plan_fixed)
+    plan_adapt = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=20,
+                                e_cap=768)
+    b_adapt = tzp.build_zone_batch(g, plan_adapt, e_cap=768)
+    work_fixed = b_fixed.n_zones * b_fixed.e_cap ** 2
+    work_adapt = b_adapt.n_zones * b_adapt.e_cap ** 2
+    rows.append(csv_row(
+        "perf_mining/adaptive_zoning", 0.0,
+        f"fixed=({b_fixed.n_zones}z x cap{b_fixed.e_cap});"
+        f"adaptive=({b_adapt.n_zones}z x cap{b_adapt.e_cap});"
+        f"padded_sweep_work_reduction={work_fixed/work_adapt:.1f}x;"
+        f"overflow={b_adapt.overflow}",
+    ))
+
+    # 3) unique codes per shard (out_cap validation)
+    from repro.core import discover, from_edges
+
+    g_small = from_edges(g.u[:8000], g.v[:8000], g.t[:8000])
+    res = discover(g_small, delta=delta, l_max=l_max, omega=8, e_cap=1024)
+    rows.append(csv_row(
+        "perf_mining/unique_codes", 0.0,
+        f"global_unique={len(res.counts)};"
+        f"out_cap_16384_headroom={16384 / max(len(res.counts), 1):.0f}x",
+    ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,55 @@
+"""Roofline summary — reads the dry-run artifacts (launch/dryrun.py) and
+emits the per-(arch x shape x mesh) three-term roofline table (§Roofline of
+EXPERIMENTS.md is generated from this)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import csv_row
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "dryrun")
+
+
+def load_records() -> list[dict]:
+    if not os.path.isdir(RESULTS):
+        return []
+    out = []
+    for fn in sorted(os.listdir(RESULTS)):
+        if fn.endswith(".json"):
+            with open(os.path.join(RESULTS, fn)) as f:
+                out.append(json.load(f))
+    return out
+
+
+def run() -> list[str]:
+    rows = []
+    records = load_records()
+    ok = [r for r in records if r.get("status") == "ok"]
+    bad = [r for r in records if r.get("status") != "ok"]
+    rows.append(csv_row(
+        "roofline/coverage", 0.0,
+        f"cells_ok={len(ok)};cells_failed={len(bad)}",
+    ))
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("tag", ""))):
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        tag = ("+" + r["tag"]) if r.get("tag") else ""
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}{tag}", bound,
+            f"comp_ms={r['compute_s']*1e3:.2f};"
+            f"mem_ms={r['memory_s']*1e3:.2f};"
+            f"coll_ms={r['collective_s']*1e3:.2f};"
+            f"dom={r['dominant']};frac={r['roofline_fraction']:.3f}",
+        ))
+    for r in bad:
+        rows.append(csv_row(
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}", 0.0,
+            "status=ERROR"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

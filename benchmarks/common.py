@@ -1,0 +1,22 @@
+"""Shared benchmark utilities."""
+
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, repeats: int = 1, warmup: int = 0, **kw):
+    """Return (result, best_seconds)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,47 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table from dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report_md [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from .bench_roofline import load_records
+
+
+def fmt_table(records, mesh=None, tags=("",)):
+    rows = [r for r in records if r.get("status") == "ok"
+            and (mesh is None or r["mesh"] == mesh)
+            and r.get("tag", "") in tags]
+    out = [
+        "| arch | shape | mesh | compute (ms) | memory (ms) | "
+        "collective (ms) | dominant | useful FLOPs | roofline frac | "
+        "temp GB/chip |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+            f"{('+' + r['tag']) if r.get('tag') else ''} | "
+            f"{r['compute_s']*1e3:.2f} | {r['memory_s']*1e3:.2f} | "
+            f"{r['collective_s']*1e3:.2f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | "
+            f"{r['roofline_fraction']:.3f} | "
+            f"{r['memory']['temp_bytes']/1e9:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--tags", default="",
+                    help="comma list; empty string = baselines only")
+    args = ap.parse_args()
+    tags = tuple(args.tags.split(",")) if args.tags else ("",)
+    print(fmt_table(load_records(), mesh=args.mesh, tags=tags))
+
+
+if __name__ == "__main__":
+    main()

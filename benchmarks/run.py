@@ -1,0 +1,61 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (
+    bench_accuracy,
+    bench_case_study,
+    bench_perf_mining,
+    bench_roofline,
+    bench_runtime,
+    bench_scalability,
+    bench_sensitivity,
+    bench_tzp,
+)
+
+SUITES = {
+    "fig7_accuracy": bench_accuracy,
+    "table2_runtime": bench_runtime,
+    "fig8_scaling": bench_scalability,
+    "fig9_fig10_sensitivity": bench_sensitivity,
+    "table4_tzp": bench_tzp,
+    "table6_case_study": bench_case_study,
+    "perf_mining": bench_perf_mining,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on suite name")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in SUITES.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as exc:  # keep the harness going
+            failures += 1
+            print(f"{name},0.0,ERROR={type(exc).__name__}:{exc}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

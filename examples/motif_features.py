@@ -1,0 +1,103 @@
+"""PTMT x GNN integration: motif-transition features for node classification.
+
+    PYTHONPATH=src python examples/motif_features.py
+
+Mines motif-transition processes from a temporal interaction stream, builds
+per-node participation histograms over the top transition types, and trains
+the assigned `gin-tu` GNN with and without the motif features — the paper's
+"motif statistics as structural signal" use case, end to end on CPU.
+"""
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.core import discover, oracle
+from repro.core.encoding import decode_code_np
+from repro.data.synthetic_graphs import triadic_stream
+from repro.models import gnn
+from repro.models.params import tree_init
+from repro.training import optimizer
+
+# --- 1. mine motif transition processes ------------------------------------
+graph = triadic_stream(4_000, 120, window=200, p_close=0.55, seed=3)
+res = discover(graph, delta=100, l_max=3, omega=6)
+top_codes = [c for c, _ in sorted(res.counts.items(),
+                                  key=lambda kv: -kv[1])[:8]]
+print(f"mined {len(res.counts)} motif types; top: {top_codes[:4]}")
+
+# --- 2. per-node participation histogram over top transition types ---------
+procs = oracle.enumerate_processes(graph.u, graph.v, graph.t, 100, 3)
+feat = np.zeros((graph.n_nodes, len(top_codes) + 1), np.float32)
+code_idx = {c: i for i, c in enumerate(top_codes)}
+for edges in procs:
+    from repro.core.encoding import encode_process_np
+
+    code = decode_code_np(encode_process_np(
+        [(int(graph.u[e]), int(graph.v[e])) for e in edges], 3))
+    idx = code_idx.get(code)
+    nodes = {int(graph.u[e]) for e in edges} | {
+        int(graph.v[e]) for e in edges}
+    for n in nodes:
+        if idx is not None:
+            feat[n, idx] += 1
+        feat[n, -1] += 1
+feat = np.log1p(feat)
+
+# --- 3. node-classification task: predict high-triadic-activity nodes ------
+deg = np.zeros(graph.n_nodes)
+np.add.at(deg, graph.u, 1)
+np.add.at(deg, graph.v, 1)
+labels = (feat[:, 0] > np.median(feat[:, 0])).astype(np.int32)
+
+src = np.asarray(graph.u)
+dst = np.asarray(graph.v)
+
+
+def batch(with_motifs: bool):
+    base = deg[:, None].astype(np.float32)
+    x = np.concatenate([base, feat], 1) if with_motifs else base
+    return {
+        "node_feat": jnp.asarray(x),
+        "edge_src": jnp.asarray(src, jnp.int32),
+        "edge_dst": jnp.asarray(dst, jnp.int32),
+        "node_mask": jnp.ones(graph.n_nodes, bool),
+        "edge_mask": jnp.ones(len(src), bool),
+        "labels": jnp.asarray(labels),
+    }
+
+
+def train(with_motifs: bool, steps: int = 60) -> float:
+    g = batch(with_motifs)
+    cfg = dataclasses.replace(
+        get_arch("gin-tu").smoke_config,
+        d_in=g["node_feat"].shape[1], n_classes=2)
+    params = tree_init(jax.random.PRNGKey(0), gnn.gnn_param_specs(cfg))
+    state = optimizer.init_state(params)
+    opt_cfg = optimizer.AdamWConfig(lr=5e-3, warmup_steps=1,
+                                    weight_decay=0.0)
+
+    @jax.jit
+    def step(p, o):
+        l, grads = jax.value_and_grad(gnn.loss_fn)(p, g, cfg, None)
+        p2, o2, _ = optimizer.apply_updates(opt_cfg, p, grads, o)
+        return p2, o2, l
+
+    for _ in range(steps):
+        params, state, loss = step(params, state)
+    logits = gnn.forward(params, g, cfg)
+    acc = float((jnp.argmax(logits, -1) == g["labels"]).mean())
+    print(f"  {'with' if with_motifs else 'without'} motif features: "
+          f"loss={float(loss):.3f} acc={acc:.3f}")
+    return acc
+
+
+print("\ntraining gin-tu node classifier:")
+acc_plain = train(False)
+acc_motif = train(True)
+print(f"\nmotif features improve accuracy: {acc_plain:.3f} -> "
+      f"{acc_motif:.3f}")

@@ -1,0 +1,45 @@
+"""Quickstart: discover motif transition processes in a temporal graph.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds a small synthetic interaction stream, runs PTMT (zone-partitioned
+parallel discovery), validates against the sequential TMC-analog baseline,
+and prints the motif transition tree (paper Fig. 6).
+"""
+
+import numpy as np
+
+from repro.core import discover, discover_sequential, from_edges
+
+# a triadic-closure-heavy interaction stream (paper's WikiTalk case study)
+rng = np.random.default_rng(0)
+from repro.data.synthetic_graphs import triadic_stream
+
+graph = triadic_stream(5_000, 150, window=240, p_close=0.5, seed=7)
+print(f"graph: {graph.n_edges} edges / {graph.n_nodes} nodes / "
+      f"{graph.time_span}s span")
+
+# --- PTMT: parallel discovery with Temporal Zone Partitioning -------------
+result = discover(graph, delta=120, l_max=4, omega=8)
+print(f"\nPTMT: {result.n_zones} zones, {len(result.counts)} motif types, "
+      f"{result.total_processes()} processes (overflow={result.overflow})")
+
+# --- exactness: matches the unpartitioned sequential baseline --------------
+seq = discover_sequential(graph, delta=120, l_max=4)
+assert seq.counts == result.counts, "partitioned counts must be exact!"
+print("exactness check vs sequential baseline: PASS")
+
+# --- the motif transition tree (paper Fig. 6 / Table 6) --------------------
+tree = result.tree()
+print("\nmotif transition tree:")
+for code, count, share in sorted(tree.root.transition_rows(),
+                                 key=lambda r: -r[1])[:4]:
+    print(f"  {code}: {count} processes ({share:.1%})")
+    for c2, n2, s2 in sorted(tree.node(code).transition_rows(),
+                             key=lambda r: -r[1])[:3]:
+        label = {"010121": "triangle", "010102": "chain",
+                 "010101": "reciprocal"}.get(c2, "")
+        print(f"    -> {c2}: {n2} ({s2:.1%}) {label}")
+
+hist = result.level_histogram()
+print("\nprocesses by final length:", dict(sorted(hist.items())))

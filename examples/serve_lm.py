@@ -1,0 +1,57 @@
+"""Serve a small LM with batched requests through the serving engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Trains a tiny model briefly (so generations aren't pure noise), then runs a
+mixed batch of prompts through the slot-pooled engine (the decode step is
+the same ``serve_step`` the decode_32k/long_500k dry-run cells lower at
+512-chip scale).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+from repro.training import optimizer
+
+cfg = dataclasses.replace(get_arch("gemma3-1b").smoke_config,
+                          name="gemma3-tiny")
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+
+# teach it a repeating pattern so greedy decode is predictable-ish
+tokens = jnp.tile(jnp.arange(8, dtype=jnp.int32), (4, 8))
+batch = {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+opt_cfg = optimizer.AdamWConfig(lr=5e-3, warmup_steps=1)
+state = optimizer.init_state(params)
+
+
+@jax.jit
+def step(p, o):
+    loss, g = jax.value_and_grad(transformer.loss_fn)(p, batch, cfg, None)
+    p2, o2, _ = optimizer.apply_updates(opt_cfg, p, g, o)
+    return p2, o2, loss
+
+
+for i in range(60):
+    params, state, loss = step(params, state)
+print(f"warmup train loss: {float(loss):.3f}")
+
+engine = ServingEngine(cfg, params, slots=2, max_len=96)
+requests = [
+    Request(prompt=[0, 1, 2, 3], max_new_tokens=8),
+    Request(prompt=[4, 5, 6], max_new_tokens=8),
+    Request(prompt=[2, 3, 4, 5, 6], max_new_tokens=6),
+]
+done = engine.run(requests)
+for i, r in enumerate(done):
+    print(f"request {i}: prompt={r.prompt} -> generated={r.out}")
+    assert r.done and len(r.out) == r.max_new_tokens
+
+# the learned pattern is k -> k+1 (mod 8); check at least the first request
+expected_next = (requests[0].prompt[-1] + 1) % 8
+print(f"expected continuation of {requests[0].prompt}: {expected_next}, "
+      f"got {done[0].out[0]}")

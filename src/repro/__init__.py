@@ -1,0 +1,14 @@
+"""repro — PTMT (parallel motif-transition discovery) on TPU/JAX.
+
+Subpackages:
+  core         the paper's algorithm (TZP + expansion + signed aggregation)
+  kernels      Pallas TPU kernels (zone_scan, segment_spmm, embedding_bag)
+  models       transformer / gnn / equiformer / recsys substrates
+  distributed  shard_map mining, compressed collectives
+  training     AdamW, checkpointing, fault-tolerant loop, elastic re-mesh
+  serving      KV-cache decode engine
+  configs      10 assigned architectures + the paper's mining config
+  launch       production meshes, 512-device dry-run, train/mine CLIs
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,256 @@
+"""Workload plumbing shared by all architecture configs.
+
+Every (arch × input-shape) cell resolves to a :class:`Workload`: a step
+function plus ShapeDtypeStruct stand-ins and NamedShardings for its inputs.
+``launch/dryrun.py`` lowers+compiles these on the production meshes; smoke
+tests run reduced configs eagerly on CPU.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import params as prm, sharding as shd, transformer
+from repro.training import optimizer
+
+
+@dataclasses.dataclass
+class Workload:
+    """One dry-run cell: ``fn(*args)`` with arg stand-ins and shardings."""
+
+    name: str                 # e.g. "granite-8b/train_4k"
+    kind: str                 # train | prefill | decode
+    fn: Callable
+    in_sds: tuple
+    in_shardings: tuple
+    out_shardings: Any = None
+    model_flops: float = 0.0  # 6*N*D (dense) or 6*N_active*D (MoE)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                 # train | prefill | decode
+
+
+LM_SHAPES = (
+    LMShape("train_4k", 4_096, 256, "train"),
+    LMShape("prefill_32k", 32_768, 32, "prefill"),
+    LMShape("decode_32k", 32_768, 128, "decode"),
+    LMShape("long_500k", 524_288, 1, "decode"),
+)
+
+
+def _replicated(mesh):
+    return NamedSharding(mesh, P())
+
+
+def lm_active_params(cfg: transformer.TransformerConfig) -> int:
+    """Active parameter count (MoE: top_k + shared experts only)."""
+    total = prm.count_params(transformer.param_specs(cfg))
+    if not cfg.moe:
+        return total
+    expert = 3 * cfg.d_model * cfg.d_ff_expert
+    inactive = cfg.n_layers * (cfg.n_experts - cfg.top_k) * expert
+    return total - inactive
+
+
+def _batch_shards(mesh, b: int) -> int:
+    """How many ways the batch dim actually shards on this mesh."""
+    import math
+
+    spec = shd.resolve((shd.BATCH,), (b,), mesh)
+    axes = spec[0]
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def choose_microbatches(cfg, shape: LMShape, mesh,
+                        carry_budget: float = 2.5e9) -> int:
+    """Gradient-accumulation factor bounding scan-carry activation memory.
+
+    The layer scan saves one [b_local/k, S, D] bf16 carry per layer for the
+    backward pass; pick the smallest power-of-two k (dividing the per-shard
+    batch) that fits them in ``carry_budget`` bytes per device.
+    """
+    if getattr(cfg, "microbatch_override", 0):
+        return cfg.microbatch_override
+    b_local = shape.global_batch // _batch_shards(mesh, shape.global_batch)
+    k = 1
+    while k < b_local:
+        carry = (cfg.n_layers * (b_local / k) * shape.seq_len
+                 * cfg.d_model * 2)
+        if carry <= carry_budget:
+            break
+        k *= 2
+    return k
+
+
+def lm_train_workload(cfg, shape: LMShape, mesh,
+                      opt_cfg: optimizer.AdamWConfig | None = None,
+                      microbatches: int | None = None):
+    opt_cfg = opt_cfg or optimizer.AdamWConfig()
+    specs = transformer.param_specs(cfg)
+    p_sds = prm.tree_sds(specs)
+    p_shd = prm.tree_shardings(mesh, specs)
+    o_sds = optimizer.AdamWState(
+        step=jax.ShapeDtypeStruct((), jnp.int32), mu=p_sds, nu=p_sds)
+    o_shd = optimizer.AdamWState(step=_replicated(mesh), mu=p_shd, nu=p_shd)
+    b, s = shape.global_batch, shape.seq_len
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_shd = shd.named_sharding(mesh, (shd.BATCH, None), (b, s))
+    batch_sds = {"tokens": tok_sds, "targets": tok_sds}
+    batch_shd = {"tokens": tok_shd, "targets": tok_shd}
+    k = microbatches or choose_microbatches(cfg, shape, mesh)
+
+    def step(params, opt_state, batch):
+        if k == 1:
+            loss, grads = jax.value_and_grad(transformer.loss_fn)(
+                params, batch, cfg, mesh
+            )
+        else:
+            # gradient accumulation over k microbatches (memory bound)
+            def mb(carry, mbatch):
+                loss_acc, g_acc = carry
+                l, g = jax.value_and_grad(transformer.loss_fn)(
+                    params, mbatch, cfg, mesh
+                )
+                g_acc = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), g_acc, g)
+                return (loss_acc + l, g_acc), None
+
+            split = jax.tree.map(
+                lambda x: x.reshape(k, b // k, *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(
+                mb, (0.0, zeros), split, unroll=cfg.unroll_scans)
+            loss = loss / k
+            grads = jax.tree.map(lambda g: g / k, grads)
+        new_p, new_o, metrics = optimizer.apply_updates(
+            opt_cfg, params, grads, opt_state
+        )
+        metrics["loss"] = loss
+        return new_p, new_o, metrics
+
+    tokens = b * s
+    return Workload(
+        name=f"{cfg.name}/{shape.name}", kind="train", fn=step,
+        in_sds=(p_sds, o_sds, batch_sds),
+        in_shardings=(p_shd, o_shd, batch_shd),
+        out_shardings=(p_shd, o_shd, None),
+        model_flops=6.0 * lm_active_params(cfg) * tokens,
+    )
+
+
+def _serve_param_specs(cfg):
+    """Inference-time parameters: stored (and gathered) at compute dtype."""
+    return jax.tree.map(
+        lambda s: s._replace(dtype=cfg.dtype),
+        transformer.param_specs(cfg), is_leaf=prm.is_spec,
+    )
+
+
+def lm_prefill_workload(cfg, shape: LMShape, mesh):
+    specs = _serve_param_specs(cfg)
+    p_sds = prm.tree_sds(specs)
+    p_shd = prm.tree_shardings(mesh, specs)
+    b, s = shape.global_batch, shape.seq_len
+    tok_sds = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    tok_shd = shd.named_sharding(mesh, (shd.BATCH, None), (b, s))
+
+    def step(params, tokens):
+        logits, _ = transformer.forward(params, tokens, cfg, mesh)
+        return logits
+
+    return Workload(
+        name=f"{cfg.name}/{shape.name}", kind="prefill", fn=step,
+        in_sds=(p_sds, tok_sds), in_shardings=(p_shd, tok_shd),
+        model_flops=2.0 * lm_active_params(cfg) * b * s,
+    )
+
+
+def lm_decode_workload(cfg, shape: LMShape, mesh):
+    specs = _serve_param_specs(cfg)
+    p_sds = prm.tree_sds(specs)
+    p_shd = prm.tree_shardings(mesh, specs)
+    b, s = shape.global_batch, shape.seq_len
+    c_specs = transformer.cache_specs(cfg, b, s)
+    c_sds = prm.tree_sds(c_specs)
+    c_shd = prm.tree_shardings(mesh, c_specs)
+    tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shd = shd.named_sharding(mesh, (shd.BATCH, None), (b, 1))
+    len_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def step(params, cache, tokens, cache_len):
+        return transformer.serve_step(
+            params, cache, tokens, cache_len, cfg, mesh
+        )
+
+    return Workload(
+        name=f"{cfg.name}/{shape.name}", kind="decode", fn=step,
+        in_sds=(p_sds, c_sds, tok_sds, len_sds),
+        in_shardings=(p_shd, c_shd, tok_shd, _replicated(mesh)),
+        out_shardings=(None, c_shd),
+        model_flops=2.0 * lm_active_params(cfg) * b,
+    )
+
+
+def lm_workload(cfg, shape: LMShape, mesh, **kw):
+    if shape.kind == "train":
+        return lm_train_workload(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return lm_prefill_workload(cfg, shape, mesh)
+    return lm_decode_workload(cfg, shape, mesh)
+
+
+@dataclasses.dataclass
+class ArchDef:
+    """Registry entry: full config + reduced smoke config + shape table."""
+
+    name: str
+    family: str                       # lm | gnn | recsys | mining
+    config: Any
+    smoke_config: Any
+    shapes: tuple
+    workload_fn: Callable             # (config, shape, mesh) -> Workload
+
+    def _shape(self, shape_name: str):
+        return next(s for s in self.shapes if s.name == shape_name)
+
+    def workload(self, shape_name: str, mesh) -> Workload:
+        return self.workload_fn(self.config, self._shape(shape_name), mesh)
+
+    def smoke_workload(self, shape_name: str, mesh) -> Workload:
+        return self.workload_fn(
+            self.smoke_config, self._shape(shape_name), mesh)
+
+    def workload_with_depth(self, shape_name: str, mesh,
+                            n_layers: int) -> Workload | None:
+        """Reduced-depth variant for scan-flop calibration (see dryrun).
+
+        Keeps shape-dependent choices (e.g. microbatch count) pinned to the
+        full-depth config so the per-layer delta is comparable.
+        """
+        if not hasattr(self.config, "n_layers"):
+            return None
+        shape = self._shape(shape_name)
+        repl = {"n_layers": n_layers, "unroll_scans": True}
+        if hasattr(self.config, "edge_chunk"):
+            repl["edge_chunk"] = 0      # count per-edge work in one body
+        cfg = dataclasses.replace(self.config, **repl)
+        kw = {}
+        if self.family == "lm" and getattr(shape, "kind", "") == "train":
+            kw["microbatches"] = choose_microbatches(
+                self.config, shape, mesh)
+        return self.workload_fn(cfg, shape, mesh, **kw)

@@ -1,0 +1,139 @@
+"""dcn-v2 — deep & cross network v2 ranking [arXiv:2008.13535].
+
+13 dense + 26 sparse fields, embed_dim=16, 3 cross layers, MLP 1024-1024-512.
+Shapes: train_batch 65k, serve_p99 512, serve_bulk 262k, retrieval_cand 1x1M.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import params as prm, recsys, sharding as shd
+from repro.training import optimizer
+
+from .common import ArchDef, Workload
+
+CONFIG = recsys.DCNConfig(name="dcn-v2")
+
+SMOKE = recsys.DCNConfig(
+    name="dcn-v2-smoke",
+    n_dense=4,
+    n_sparse=6,
+    embed_dim=8,
+    n_cross_layers=2,
+    mlp=(32, 16),
+    vocab_sizes=(100, 100, 50, 50, 20, 20),
+    bag_size=2,
+    d_retrieval=8,
+    n_items=1000,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RecsysShape:
+    name: str
+    batch: int
+    kind: str                 # train | serve | retrieval
+    n_candidates: int = 0
+
+
+RECSYS_SHAPES = (
+    RecsysShape("train_batch", 65_536, "train"),
+    RecsysShape("serve_p99", 512, "serve"),
+    RecsysShape("serve_bulk", 262_144, "serve"),
+    RecsysShape("retrieval_cand", 1, "retrieval", n_candidates=1_000_000),
+)
+
+
+def _batch_specs(cfg, b, mesh, with_labels):
+    sds = {
+        "dense": jax.ShapeDtypeStruct((b, cfg.n_dense), jnp.float32),
+        "sparse_ids": jax.ShapeDtypeStruct(
+            (b, cfg.n_sparse, cfg.bag_size), jnp.int32),
+        "sparse_weights": jax.ShapeDtypeStruct(
+            (b, cfg.n_sparse, cfg.bag_size), jnp.float32),
+    }
+    if with_labels:
+        sds["labels"] = jax.ShapeDtypeStruct((b,), jnp.float32)
+    shards = {
+        k: shd.named_sharding(mesh, (shd.BATCH,) + (None,) * (len(v.shape) - 1),
+                              v.shape)
+        for k, v in sds.items()
+    }
+    return sds, shards
+
+
+def recsys_workload(cfg, shape: RecsysShape, mesh,
+                    opt_cfg: optimizer.AdamWConfig | None = None) -> Workload:
+    specs = recsys.dcn_param_specs(cfg)
+    p_sds = prm.tree_sds(specs)
+    p_shd = prm.tree_shardings(mesh, specs)
+    d = cfg.d_interact
+    mlp_flops = d * cfg.mlp[0] + sum(
+        a * b for a, b in zip(cfg.mlp[:-1], cfg.mlp[1:])
+    )
+    fwd_flops = 2.0 * shape.batch * (
+        cfg.n_cross_layers * d * d + mlp_flops
+    )
+
+    if shape.kind == "train":
+        opt_cfg = opt_cfg or optimizer.AdamWConfig(weight_decay=0.0)
+        o_sds = optimizer.AdamWState(
+            step=jax.ShapeDtypeStruct((), jnp.int32), mu=p_sds, nu=p_sds)
+        rep = shd.named_sharding(mesh, (), ())
+        o_shd = optimizer.AdamWState(step=rep, mu=p_shd, nu=p_shd)
+        b_sds, b_shd = _batch_specs(cfg, shape.batch, mesh, True)
+
+        def step(params, opt_state, batch):
+            l, grads = jax.value_and_grad(recsys.loss_fn)(
+                params, batch, cfg, mesh
+            )
+            new_p, new_o, metrics = optimizer.apply_updates(
+                opt_cfg, params, grads, opt_state
+            )
+            metrics["loss"] = l
+            return new_p, new_o, metrics
+
+        return Workload(
+            name=f"{cfg.name}/{shape.name}", kind="train", fn=step,
+            in_sds=(p_sds, o_sds, b_sds), in_shardings=(p_shd, o_shd, b_shd),
+            out_shardings=(p_shd, o_shd, None), model_flops=3.0 * fwd_flops,
+        )
+
+    if shape.kind == "serve":
+        b_sds, b_shd = _batch_specs(cfg, shape.batch, mesh, False)
+
+        def serve(params, batch):
+            return recsys.forward(params, batch, cfg, mesh)
+
+        return Workload(
+            name=f"{cfg.name}/{shape.name}", kind="serve", fn=serve,
+            in_sds=(p_sds, b_sds), in_shardings=(p_shd, b_shd),
+            model_flops=fwd_flops,
+        )
+
+    # retrieval: one query vs n_candidates batched dot
+    b_sds, b_shd = _batch_specs(cfg, shape.batch, mesh, False)
+    cand_sds = jax.ShapeDtypeStruct((shape.n_candidates,), jnp.int32)
+    cand_shd = shd.named_sharding(
+        mesh, (shd.MODEL,), (shape.n_candidates,))
+
+    def retrieve(params, batch, candidate_ids):
+        return recsys.retrieval_step(params, batch, candidate_ids, cfg, mesh)
+
+    return Workload(
+        name=f"{cfg.name}/{shape.name}", kind="serve", fn=retrieve,
+        in_sds=(p_sds, b_sds, cand_sds),
+        in_shardings=(p_shd, b_shd, cand_shd),
+        model_flops=fwd_flops
+        + 2.0 * shape.batch * shape.n_candidates * cfg.d_retrieval,
+    )
+
+
+ARCH = ArchDef(
+    name="dcn-v2", family="recsys", config=CONFIG, smoke_config=SMOKE,
+    shapes=RECSYS_SHAPES, workload_fn=recsys_workload,
+)

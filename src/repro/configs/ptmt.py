@@ -1,0 +1,99 @@
+"""ptmt-mining — the paper's own workload as a first-class arch config.
+
+Shapes are zone-batch geometries (zones x per-zone edge capacity); the step
+is the full distributed discovery: per-device zone expansion + two-level
+signed merge.  Paper defaults: delta=600s, l_max=6, omega=20.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import mining
+
+from .common import ArchDef, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningConfig:
+    name: str
+    delta: int = 600
+    l_max: int = 6
+    omega: int = 20
+    backend: str = "ref"
+    out_cap: int = 65536
+    merge_mode: str = "flat"   # "hierarchical": staged per-axis merge
+
+
+CONFIG = MiningConfig(name="ptmt-mining")
+SMOKE = MiningConfig(name="ptmt-mining-smoke", delta=30, l_max=3,
+                     out_cap=1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class MiningShape:
+    name: str
+    n_zones: int
+    e_cap: int
+
+
+MINING_SHAPES = (
+    MiningShape("mine_1m", 2_048, 2_048),      # ~4M edge slots
+    MiningShape("mine_dense", 1_024, 8_192),   # bursty regime (few big zones)
+    MiningShape("mine_wide", 8_192, 1_024),    # sparse regime (many zones)
+    MiningShape("mine_xl", 8_192, 4_096),      # ~34M edge slots
+)
+
+
+def mining_workload(cfg: MiningConfig, shape: MiningShape, mesh) -> Workload:
+    axes = tuple(mesh.axis_names)
+    fn = mining.make_mine_fn(
+        mesh, axes, delta=cfg.delta, l_max=cfg.l_max,
+        backend=cfg.backend, out_cap=cfg.out_cap,
+        merge_mode=cfg.merge_mode,
+    )
+    sds = mining.input_specs(shape.n_zones, shape.e_cap)
+    in_sds = (sds["u"], sds["v"], sds["t"], sds["valid"], sds["signs"])
+    # The expansion sweep is integer VPU work, not MXU flops: count the
+    # per-(edge x candidate) vector ops as the useful-work yardstick.
+    per_pair_ops = (cfg.l_max + 1) + 10
+    vpu_ops = float(shape.n_zones) * shape.e_cap * shape.e_cap * per_pair_ops
+    return Workload(
+        name=f"{cfg.name}/{shape.name}", kind="mine", fn=fn,
+        in_sds=in_sds, in_shardings=None,   # shard_map carries the specs
+        model_flops=vpu_ops,
+    )
+
+
+def analytic_mining_terms(cfg: MiningConfig, shape: MiningShape,
+                          n_chips: int) -> dict:
+    """Roofline inputs for the mining sweep (integer VPU workload).
+
+    Per zone the expansion does E steps, each a dense vector pass over the
+    C = E candidate table (~(l_max+1)+10 int ops per pair).  On TPU the
+    candidate table lives in VMEM (zone_scan kernel), so HBM traffic is the
+    edge stream in + final codes out + one table spill per zone, not the
+    per-step table traffic.
+    """
+    import repro.core.encoding as enc
+
+    z_local = max(shape.n_zones // n_chips, 1)
+    per_pair = (cfg.l_max + 1) + 10
+    ops = float(z_local) * shape.e_cap * shape.e_cap * per_pair
+    limbs = enc.n_limbs(cfg.l_max)
+    state_bytes = (limbs + cfg.l_max + 1 + 4) * 4
+    hbm = float(z_local) * (
+        shape.e_cap * 16                      # u, v, t, valid in
+        + shape.e_cap * (limbs + 1) * 4       # codes + lengths out
+        + shape.e_cap * state_bytes           # one table spill
+    )
+    return {"ops_per_chip": ops, "hbm_bytes_per_chip": hbm}
+
+
+ARCH = ArchDef(
+    name="ptmt-mining", family="mining", config=CONFIG, smoke_config=SMOKE,
+    shapes=MINING_SHAPES, workload_fn=mining_workload,
+)

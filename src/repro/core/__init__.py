@@ -1,0 +1,19 @@
+# The paper's primary contribution: PTMT — parallel motif-transition-process
+# discovery with Temporal Zone Partitioning, adapted TPU-native (see DESIGN.md).
+from . import aggregation, encoding, expansion, oracle, transitions, tzp
+from .api import DiscoveryResult, discover, discover_sequential
+from .temporal_graph import TemporalGraph, from_edges
+
+__all__ = [
+    "DiscoveryResult",
+    "TemporalGraph",
+    "aggregation",
+    "discover",
+    "discover_sequential",
+    "encoding",
+    "expansion",
+    "from_edges",
+    "oracle",
+    "transitions",
+    "tzp",
+]

@@ -1,0 +1,159 @@
+"""Phase 1 — growth-zone candidate expansion (vectorized reference).
+
+The paper's ``try_to_transit`` loop, re-thought for SIMD/TPU execution:
+
+* Definition 3 makes the successor of a motif unique ("no earlier valid
+  transition"), so processes never fork.  Candidate *i* is therefore exactly
+  the process seeded by edge *i* — a static, allocator-free table.
+* Edges are consumed with ``lax.scan`` in stream order; each step does one
+  dense vector sweep over the candidate table (extension test + relabeling
+  encode), which is the inner loop the Pallas kernel tiles into VMEM.
+
+State (structure-of-arrays over candidates):
+  ``length``  int32[C]  edges absorbed so far (0 = not yet seeded)
+  ``last_t``  int32[C]  timestamp of the newest edge
+  ``done``    bool[C]   timed out (frozen forever)
+  ``n_nodes`` int32[C]  node-table population
+  ``nodes``   int32[C,K] first-occurrence node table, K = l_max + 1, -1 = empty
+  ``code``    int32[C,L] multi-limb relabeling code (see core.encoding)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from . import encoding
+
+
+class ZoneState(NamedTuple):
+    length: jax.Array
+    last_t: jax.Array
+    done: jax.Array
+    n_nodes: jax.Array
+    nodes: jax.Array
+    code: jax.Array
+
+
+class ZoneResult(NamedTuple):
+    """Final per-candidate codes of one zone (candidate i = seed edge i)."""
+
+    code: jax.Array     # int32[C, L]
+    length: jax.Array   # int32[C] (0 for padding slots)
+
+
+def init_state(e_cap: int, l_max: int) -> ZoneState:
+    k = l_max + 1
+    return ZoneState(
+        length=jnp.zeros(e_cap, jnp.int32),
+        last_t=jnp.zeros(e_cap, jnp.int32),
+        done=jnp.zeros(e_cap, bool),
+        n_nodes=jnp.zeros(e_cap, jnp.int32),
+        nodes=jnp.full((e_cap, k), -1, jnp.int32),
+        code=encoding.empty_code((e_cap,), l_max),
+    )
+
+
+def step(state: ZoneState, edge, *, delta: int, l_max: int) -> ZoneState:
+    """Absorb one edge: time-outs, extensions, then seed the new candidate."""
+    u, v, t, valid, slot = edge
+    c = state.length.shape[0]
+
+    active = (state.length > 0) & ~state.done
+    gap_ok = (t > state.last_t) & (t - state.last_t <= delta)
+    timed_out = active & (t - state.last_t > delta) & valid
+    done = state.done | timed_out
+
+    u_hit = state.nodes == u
+    v_hit = state.nodes == v
+    u_in = u_hit.any(axis=1)
+    v_in = v_hit.any(axis=1)
+    extend = (
+        active & ~timed_out & gap_ok & (state.length < l_max)
+        & (u_in | v_in) & valid
+    )
+
+    # first-occurrence relabeling (Phase 3 encoding, fused into the sweep)
+    k_iota = jnp.arange(state.nodes.shape[1], dtype=jnp.int32)[None, :]
+    label_u = jnp.where(u_in, jnp.argmax(u_hit, axis=1), state.n_nodes)
+    nn1 = state.n_nodes + (~u_in).astype(jnp.int32)
+    same_uv = u == v
+    label_v = jnp.where(
+        same_uv, label_u, jnp.where(v_in, jnp.argmax(v_hit, axis=1), nn1)
+    )
+    nn2 = jnp.where(same_uv, nn1, nn1 + (~v_in).astype(jnp.int32))
+
+    put_u = extend & ~u_in
+    put_v = extend & ~v_in & ~same_uv
+    nodes = jnp.where(
+        (put_u[:, None] & (k_iota == state.n_nodes[:, None])), u, state.nodes
+    )
+    nodes = jnp.where(
+        (put_v[:, None] & (k_iota == nn1[:, None])), v, nodes
+    )
+
+    pos = 2 * state.length
+    code = encoding.append_digit(
+        state.code, pos, jnp.where(extend, label_u + 1, 0)
+    )
+    code = encoding.append_digit(
+        code, pos + 1, jnp.where(extend, label_v + 1, 0)
+    )
+
+    length = state.length + extend.astype(jnp.int32)
+    last_t = jnp.where(extend, t, state.last_t)
+    n_nodes = jnp.where(extend, nn2, state.n_nodes)
+
+    # seed the candidate owned by this edge (slot == stream index)
+    seed = (jnp.arange(c, dtype=jnp.int32) == slot) & valid
+    length = jnp.where(seed, 1, length)
+    last_t = jnp.where(seed, t, last_t)
+    n_nodes = jnp.where(seed, jnp.where(same_uv, 1, 2), n_nodes)
+    nodes = jnp.where((seed[:, None] & (k_iota == 0)), u, nodes)
+    nodes = jnp.where(
+        (seed[:, None] & (k_iota == 1) & ~same_uv), v, nodes
+    )
+    seed_code = encoding.append_digit(
+        encoding.empty_code((c,), l_max),
+        jnp.zeros(c, jnp.int32),
+        jnp.ones(c, jnp.int32),
+    )
+    seed_code = encoding.append_digit(
+        seed_code,
+        jnp.ones(c, jnp.int32),
+        jnp.where(same_uv, 1, 2) * jnp.ones(c, jnp.int32),
+    )
+    code = jnp.where(seed[:, None], seed_code, code)
+
+    return ZoneState(length=length, last_t=last_t, done=done,
+                     n_nodes=n_nodes, nodes=nodes, code=code)
+
+
+@functools.partial(jax.jit, static_argnames=("delta", "l_max"))
+def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+    """Run the full expansion over one zone's padded edge stream.
+
+    Args:
+      u, v, t: int32[E] padded edge stream (time-ordered within the zone).
+      valid:   bool[E] real-edge mask.
+    Returns:
+      ZoneResult with per-seed final codes; padding slots have length 0.
+    """
+    e_cap = u.shape[0]
+    state = init_state(e_cap, l_max)
+
+    def body(state, edge):
+        return step(state, edge, delta=delta, l_max=l_max), None
+
+    slots = jnp.arange(e_cap, dtype=jnp.int32)
+    state, _ = jax.lax.scan(body, state, (u, v, t, valid, slots))
+    return ZoneResult(code=state.code, length=state.length)
+
+
+def scan_zones(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+    """vmap of :func:`scan_zone` over a [Z, E] zone batch."""
+    fn = functools.partial(scan_zone, delta=delta, l_max=l_max)
+    return jax.vmap(fn)(u, v, t, valid)

@@ -1,0 +1,3 @@
+from . import lm_pipeline, recsys_pipeline, synthetic_graphs
+
+__all__ = ["lm_pipeline", "recsys_pipeline", "synthetic_graphs"]

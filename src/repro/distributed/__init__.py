@@ -1,0 +1,3 @@
+from . import collectives, mining
+
+__all__ = ["collectives", "mining"]

@@ -1,0 +1,17 @@
+"""Jit'd wrapper for the Pallas embedding-bag kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .embedding_bag import embedding_bag_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("b_blk", "interpret"))
+def embedding_bag(table, ids, weights, *, b_blk: int = 64,
+                  interpret: bool | None = None):
+    return embedding_bag_pallas(
+        table, ids, weights, b_blk=b_blk, interpret=interpret
+    )

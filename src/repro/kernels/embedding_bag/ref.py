@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the embedding-bag kernel."""
+
+import jax.numpy as jnp
+
+
+def embedding_bag(table, ids, weights):
+    """Weighted sum-bag lookup.
+
+    table: [V, D]; ids: int32[B, K]; weights: f32[B, K] -> [B, D].
+    (JAX has no native EmbeddingBag — gather + weighted reduce is the
+    reference semantics, matching ``torch.nn.EmbeddingBag(mode='sum')``
+    with per-sample weights.)
+    """
+    rows = jnp.take(table, ids, axis=0)              # [B, K, D]
+    return jnp.einsum("bkd,bk->bd", rows, weights.astype(rows.dtype))

@@ -1,0 +1,29 @@
+"""Jit'd wrapper: unsorted scatter-sum via sort + the sorted Pallas kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .segment_spmm import scatter_sum_sorted_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "n_blk", "e_blk", "interpret")
+)
+def scatter_sum(
+    values, segment_ids, num_segments: int, mask=None, *,
+    n_blk: int = 128, e_blk: int = 256, interpret: bool | None = None,
+):
+    """Drop-in for ``jax.ops.segment_sum`` over 2-D values (+ mask)."""
+    if mask is not None:
+        values = jnp.where(mask[:, None], values, 0.0)
+        segment_ids = jnp.where(mask, segment_ids, num_segments)
+    order = jnp.argsort(segment_ids)
+    return scatter_sum_sorted_pallas(
+        jnp.take(values, order, axis=0),
+        jnp.take(segment_ids, order),
+        num_segments, n_blk=n_blk, e_blk=e_blk, interpret=interpret,
+    )

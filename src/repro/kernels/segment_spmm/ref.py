@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the segment-scatter SpMM kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def scatter_sum(values, segment_ids, num_segments: int, mask=None):
+    """Sum rows of ``values`` into ``num_segments`` buckets.
+
+    values: [E, D]; segment_ids: int32[E]; mask: bool[E] or None.
+    This is the GNN message-aggregation primitive (SpMM with a one-hot
+    adjacency), the exact semantics of ``jax.ops.segment_sum``.
+    """
+    if mask is not None:
+        values = jnp.where(mask[:, None], values, 0.0)
+    return jax.ops.segment_sum(values, segment_ids,
+                               num_segments=num_segments)

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: sorted-segment scatter-sum as one-hot MXU matmuls.
+
+The GNN aggregation ``out[dst] += msg`` is irregular; the TPU-native
+formulation regularizes it:
+
+  1. (wrapper) sort messages by destination — sorted order makes each output
+     node block touch a *contiguous* edge range;
+  2. grid = (node_blocks, edge_blocks), node-outer.  Each cell builds the
+     one-hot matrix ``onehot[b, e] = (dst[e] == node_base + b)`` and issues
+     ``acc += onehot @ values`` — an MXU matmul instead of a scatter;
+  3. off-diagonal cells (edge block's dst range disjoint from the node
+     block) are skipped via block-boundary tests on the sorted dst array —
+     the same live-window trick as kernels/zone_scan, leaving O(E/B) cells.
+
+The output block stays resident in VMEM across the inner edge loop and is
+flushed once per node block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dst_ref, values_ref, out_ref, *, n_blk, e_blk, n_e_blocks):
+    ni = pl.program_id(0)
+    ei = pl.program_id(1)
+    node_base = ni * n_blk
+
+    @pl.when(ei == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    # skip: sorted dst => edge block range [first, last]
+    first = dst_ref[0, 0]
+    last = dst_ref[0, e_blk - 1]
+    live = (last >= node_base) & (first < node_base + n_blk)
+
+    @pl.when(live)
+    def _accum():
+        dst = dst_ref[0, :]                                  # [e_blk]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (n_blk, e_blk), 0)
+        onehot = (dst[None, :] - node_base == rows).astype(
+            values_ref.dtype
+        )
+        out_ref[...] += jax.lax.dot(
+            onehot, values_ref[...],
+            preferred_element_type=out_ref.dtype,
+        )
+
+
+def scatter_sum_sorted_pallas(
+    values, dst_sorted, num_segments: int, *,
+    n_blk: int = 128, e_blk: int = 256, interpret: bool | None = None,
+):
+    """values [E, D] already sorted by ``dst_sorted`` (invalid rows must be
+    zeroed and their dst set to ``num_segments``-or-larger sentinel)."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e, d = values.shape
+    e_pad = -(-e // e_blk) * e_blk
+    n_pad = -(-num_segments // n_blk) * n_blk
+    if e_pad != e:
+        values = jnp.pad(values, ((0, e_pad - e), (0, 0)))
+        dst_sorted = jnp.pad(
+            dst_sorted, (0, e_pad - e), constant_values=n_pad
+        )
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, n_blk=n_blk, e_blk=e_blk,
+            n_e_blocks=e_pad // e_blk,
+        ),
+        grid=(n_pad // n_blk, e_pad // e_blk),
+        in_specs=[
+            pl.BlockSpec((1, e_blk), lambda ni, ei: (0, ei)),   # dst
+            pl.BlockSpec((e_blk, d), lambda ni, ei: (ei, 0)),   # values
+        ],
+        out_specs=pl.BlockSpec((n_blk, d), lambda ni, ei: (ni, 0)),
+        # fp32 accumulation regardless of input dtype (MXU-native)
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), jnp.float32),
+        interpret=interpret,
+    )(dst_sorted.reshape(1, e_pad), values)
+    return out[:num_segments].astype(values.dtype)

@@ -1,0 +1,38 @@
+"""Jit'd wrappers exposing the Pallas zone-scan with the reference API."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.expansion import ZoneResult
+
+from .zone_scan import zone_scan_pallas
+
+
+@functools.partial(
+    jax.jit, static_argnames=("delta", "l_max", "c_blk", "e_blk", "interpret")
+)
+def scan_zone(
+    u, v, t, valid, *, delta: int, l_max: int,
+    c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+) -> ZoneResult:
+    code, length = zone_scan_pallas(
+        u, v, t, valid, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
+        interpret=interpret,
+    )
+    return ZoneResult(code=code, length=length)
+
+
+def scan_zones(
+    u, v, t, valid, *, delta: int, l_max: int,
+    c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+) -> ZoneResult:
+    """vmap over a [Z, E] zone batch (same signature as the reference)."""
+    fn = functools.partial(
+        scan_zone, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
+        interpret=interpret,
+    )
+    return jax.vmap(fn)(u, v, t, valid)

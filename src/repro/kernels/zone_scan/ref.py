@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the zone-scan kernel.
+
+The reference implementation lives in ``repro.core.expansion`` (it *is* the
+paper's Phase-1 semantics and is validated against the brute-force Python
+oracle in tests).  Kernel tests compare the Pallas kernel against this.
+"""
+
+from repro.core.expansion import ZoneResult, scan_zone, scan_zones
+
+__all__ = ["ZoneResult", "scan_zone", "scan_zones"]

@@ -1,0 +1,234 @@
+"""Pallas TPU kernel for PTMT Phase-1 zone expansion.
+
+Layout (all VMEM, lanes = candidates):
+
+  grid = (n_cand_blocks, n_edge_blocks)   # both sequential on TPU
+  scratch: candidate SoA for ONE candidate block —
+      length/last_t/done/n_nodes  int32[1, C_BLK]
+      nodes                       int32[K, C_BLK]   K = l_max + 1
+      code                        int32[L, C_BLK]   L = n_limbs(l_max)
+  inputs per cell: one edge block (u, v, t, valid as int32[1, E_BLK])
+      plus the candidate block's seed times t_cand[1, C_BLK]
+  outputs per candidate block: code int32[L, C_BLK], length int32[1, C_BLK]
+
+With the candidate axis OUTER, each candidate block streams the whole edge
+stream once and is flushed exactly once; scratch is a single block
+(~(K+L+4) * C_BLK * 4 bytes ≈ 50 KB at C_BLK=1024, l_max=6 — far under VMEM).
+
+**Live-window block skipping** (beyond-paper, the kernel's key optimization):
+cell (c, e) is skipped when
+  * every edge index in block e precedes every candidate in block c
+    (those candidates are not yet seeded: extensions need edge_idx > seed), or
+  * the e-block's first timestamp exceeds the c-block's last seed time by more
+    than ``l_max * delta`` (every candidate's lifetime is over — Lemma 4.1's
+    span bound).
+Edges are time-sorted, so both tests are O(1) block-boundary reads.  A
+candidate is live for ~``1/omega`` of its zone, so skipping turns the dense
+O(E^2) sweep into O(E^2 / omega) — measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import encoding
+
+DIGITS_PER_LIMB = encoding.DIGITS_PER_LIMB
+
+
+def _kernel(
+    t_cand_ref, u_ref, v_ref, t_ref, valid_ref,
+    code_out_ref, len_out_ref,
+    length_ref, last_t_ref, done_ref, nn_ref, nodes_ref, code_ref,
+    *, delta: int, l_max: int, c_blk: int, e_blk: int, n_e_blocks: int,
+):
+    ci = pl.program_id(0)
+    ei = pl.program_id(1)
+    k = l_max + 1
+    limbs = code_ref.shape[0]
+
+    @pl.when(ei == 0)
+    def _init():
+        length_ref[...] = jnp.zeros_like(length_ref)
+        last_t_ref[...] = jnp.zeros_like(last_t_ref)
+        done_ref[...] = jnp.zeros_like(done_ref)
+        nn_ref[...] = jnp.zeros_like(nn_ref)
+        nodes_ref[...] = jnp.full_like(nodes_ref, -1)
+        code_ref[...] = jnp.zeros_like(code_ref)
+
+    c_base = ci * c_blk
+    e_base = ei * e_blk
+    # skip tests (see module docstring)
+    index_live = e_base + e_blk - 1 >= c_base
+    time_live = t_ref[0, 0] <= t_cand_ref[0, c_blk - 1] + l_max * delta
+
+    @pl.when(index_live & time_live)
+    def _sweep():
+        iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, c_blk), 1) + c_base
+        iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, c_blk), 0)
+
+        def body(j, _):
+            u = u_ref[0, j]
+            v = v_ref[0, j]
+            t = t_ref[0, j]
+            valid = valid_ref[0, j] != 0
+
+            length = length_ref[...]
+            last_t = last_t_ref[...]
+            done = done_ref[...] != 0
+            n_nodes = nn_ref[...]
+            nodes = nodes_ref[...]
+
+            active = (length > 0) & ~done
+            gap_ok = (t > last_t) & (t - last_t <= delta)
+            timed_out = active & (t - last_t > delta) & valid
+
+            u_hit = nodes == u
+            v_hit = nodes == v
+            u_in = u_hit.any(axis=0, keepdims=True)
+            v_in = v_hit.any(axis=0, keepdims=True)
+            extend = (
+                active & ~timed_out & gap_ok & (length < l_max)
+                & (u_in | v_in) & valid
+            )
+
+            u_pos = jnp.min(jnp.where(u_hit, iota_k, k), axis=0,
+                            keepdims=True)
+            v_pos = jnp.min(jnp.where(v_hit, iota_k, k), axis=0,
+                            keepdims=True)
+            label_u = jnp.where(u_in, u_pos, n_nodes)
+            nn1 = n_nodes + (~u_in).astype(jnp.int32)
+            same_uv = u == v
+            label_v = jnp.where(same_uv, label_u,
+                                jnp.where(v_in, v_pos, nn1))
+            nn2 = jnp.where(same_uv, nn1, nn1 + (~v_in).astype(jnp.int32))
+
+            put_u = extend & ~u_in
+            put_v = extend & ~v_in & ~same_uv
+            local_k = iota_k  # broadcast helper over node slots
+            nodes = jnp.where(put_u & (local_k == n_nodes), u, nodes)
+            nodes = jnp.where(put_v & (local_k == nn1), v, nodes)
+
+            # append the two digits (label+1) at positions 2*len, 2*len+1
+            code = code_ref[...]
+            li_iota = jax.lax.broadcasted_iota(
+                jnp.int32, (limbs, c_blk), 0
+            )
+            for which, label in ((0, label_u), (1, label_v)):
+                pos = 2 * length + which
+                limb_idx = pos // DIGITS_PER_LIMB
+                shift = 4 * (DIGITS_PER_LIMB - 1 - pos % DIGITS_PER_LIMB)
+                add = jnp.where(
+                    extend, jnp.left_shift(label + 1, shift), 0
+                )
+                code = code + jnp.where(li_iota == limb_idx, add, 0)
+
+            new_length = length + extend.astype(jnp.int32)
+            new_last_t = jnp.where(extend, t, last_t)
+            new_nn = jnp.where(extend, nn2, n_nodes)
+
+            # seed the candidate owned by this edge
+            seed = (iota_c == e_base + j) & valid
+            new_length = jnp.where(seed, 1, new_length)
+            new_last_t = jnp.where(seed, t, new_last_t)
+            new_nn = jnp.where(seed, jnp.where(same_uv, 1, 2), new_nn)
+            nodes = jnp.where(seed & (local_k == 0), u, nodes)
+            nodes = jnp.where(seed & (local_k == 1) & ~same_uv, v, nodes)
+            seed_digit0 = 1 << (4 * (DIGITS_PER_LIMB - 1))
+            seed_digit1 = jnp.where(same_uv, 1, 2) << (
+                4 * (DIGITS_PER_LIMB - 2)
+            )
+            seed_code = jnp.where(li_iota == 0, seed_digit0 + seed_digit1, 0)
+            code = jnp.where(seed, seed_code, code)
+
+            length_ref[...] = new_length
+            last_t_ref[...] = new_last_t
+            done_ref[...] = (done | timed_out).astype(jnp.int32)
+            nn_ref[...] = new_nn
+            nodes_ref[...] = nodes
+            code_ref[...] = code
+            return 0
+
+        jax.lax.fori_loop(0, e_blk, body, 0)
+
+    @pl.when(ei == n_e_blocks - 1)
+    def _flush():
+        code_out_ref[...] = code_ref[...]
+        len_out_ref[...] = length_ref[...]
+
+
+def zone_scan_pallas(
+    u, v, t, valid, *, delta: int, l_max: int,
+    c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+):
+    """Run the Pallas zone-scan over one padded zone.
+
+    Args:
+      u, v, t: int32[E]; valid: bool[E].  E is padded up to block multiples.
+    Returns:
+      (code int32[E, L], length int32[E]) per seed candidate.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    e = u.shape[0]
+    limbs = encoding.n_limbs(l_max)
+    k = l_max + 1
+
+    blk = max(c_blk, e_blk)
+    e_pad = -(-e // blk) * blk
+    pad = e_pad - e
+    valid_i = valid.astype(jnp.int32)
+    if pad:
+        u = jnp.pad(u, (0, pad))
+        v = jnp.pad(v, (0, pad))
+        t = jnp.pad(t, (0, pad))
+        valid_i = jnp.pad(valid_i, (0, pad))
+    # normalize padding timestamps (invalid slots) to the max valid time so
+    # block skipping stays conservative; padded edges are semantically inert.
+    t_fill = jnp.max(jnp.where(valid_i != 0, t, jnp.iinfo(jnp.int32).min))
+    t = jnp.where(valid_i != 0, t, t_fill)
+
+    n_c_blocks = e_pad // c_blk
+    n_e_blocks = e_pad // e_blk
+    row = lambda x: x.reshape(1, e_pad)
+    u2, v2, t2, valid2 = row(u), row(v), row(t), row(valid_i)
+
+    kernel = functools.partial(
+        _kernel, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
+        n_e_blocks=n_e_blocks,
+    )
+    code, length = pl.pallas_call(
+        kernel,
+        grid=(n_c_blocks, n_e_blocks),
+        in_specs=[
+            pl.BlockSpec((1, c_blk), lambda ci, ei: (0, ci)),   # t_cand
+            pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # u
+            pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # v
+            pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # t
+            pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # valid
+        ],
+        out_specs=[
+            pl.BlockSpec((limbs, c_blk), lambda ci, ei: (0, ci)),
+            pl.BlockSpec((1, c_blk), lambda ci, ei: (0, ci)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((limbs, e_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, e_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, c_blk), jnp.int32),      # length
+            pltpu.VMEM((1, c_blk), jnp.int32),      # last_t
+            pltpu.VMEM((1, c_blk), jnp.int32),      # done
+            pltpu.VMEM((1, c_blk), jnp.int32),      # n_nodes
+            pltpu.VMEM((k, c_blk), jnp.int32),      # nodes
+            pltpu.VMEM((limbs, c_blk), jnp.int32),  # code
+        ],
+        interpret=interpret,
+    )(t2, u2, v2, t2, valid2)
+
+    return code.T[:e], length[0, :e]

@@ -1,0 +1,3 @@
+# Launch layer: production mesh, dry-run driver, training/mining CLIs.
+# NB: dryrun.py must be executed as a script/module so its XLA_FLAGS lines
+# run before jax initializes devices — do not import it from here.

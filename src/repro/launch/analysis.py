@@ -1,0 +1,123 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+
+``cost_analysis()`` on an SPMD executable reports PER-PARTITION flops/bytes
+(verified empirically), so the three terms are:
+
+  compute_s    = flops_per_chip / PEAK_FLOPS
+  memory_s     = bytes_per_chip / HBM_BW
+  collective_s = collective_bytes_per_chip / ICI_BW
+
+collective bytes are not in cost_analysis — we parse the post-SPMD HLO text
+and sum per-op traffic with ring-algorithm weights (all-reduce counts 2x:
+reduce-scatter + all-gather phases).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+# traffic weight per collective kind (ring algorithms, large-n limit)
+_COLL_WEIGHTS = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,      # counted on the (larger) input
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(\S+)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\("
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-chip collective traffic by op kind from post-SPMD HLO."""
+    out = {k: 0.0 for k in _COLL_WEIGHTS}
+    counts = {k: 0 for k in _COLL_WEIGHTS}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        result_shape, kind = m.groups()
+        if kind == "reduce-scatter":
+            # input is output * group size; operands appear inside (...)
+            args = line[m.end():]
+            size = _shape_bytes(args.split("),")[0])
+            if size == 0:
+                size = _shape_bytes(result_shape)
+        else:
+            size = _shape_bytes(result_shape)
+        out[kind] += size * _COLL_WEIGHTS[kind]
+        counts[kind] += 1
+    return {
+        "per_kind_bytes": out,
+        "per_kind_counts": counts,
+        "total_bytes": sum(out.values()),
+    }
+
+
+VPU_PEAK = 3.85e12   # int/elementwise ops/s per chip (8x128 lanes, ~4 ALUs)
+
+
+def roofline(record: dict) -> dict:
+    """record: flops_per_chip, bytes_per_chip, collective_bytes_per_chip,
+    n_chips, model_flops (global), optional peak_flops override (VPU
+    workloads like the mining sweep use VPU_PEAK)."""
+    peak = record.get("peak_flops", PEAK_FLOPS)
+    compute_s = record["flops_per_chip"] / peak
+    memory_s = record["bytes_per_chip"] / HBM_BW
+    collective_s = record["collective_bytes_per_chip"] / ICI_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s),
+        ("collective", collective_s), key=lambda kv: kv[1],
+    )[0]
+    hlo_flops_global = record["flops_per_chip"] * record["n_chips"]
+    useful = (
+        record["model_flops"] / hlo_flops_global if hlo_flops_global else 0.0
+    )
+    bound_s = max(compute_s, memory_s, collective_s)
+    # roofline fraction: useful model flops vs what the chips could do in
+    # the bound time
+    frac = (
+        record["model_flops"]
+        / (record["n_chips"] * peak * bound_s)
+        if bound_s else 0.0
+    )
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "useful_flops_ratio": useful,
+        "roofline_fraction": frac,
+    }

@@ -1,0 +1,40 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The single-pod mesh
+is 16x16 = 256 chips (v5e pod); multi-pod adds a leading ``pod`` axis for
+2 pods = 512 chips.  The ``pod`` axis is pure data parallelism (its
+collectives cross DCN); ``data`` carries FSDP + batch; ``model`` carries
+TP/EP/sequence shards over ICI.
+"""
+
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    devs = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_test_mesh(shape=(2, 2, 2), axes=("pod", "data", "model")):
+    """Small mesh for CPU subprocess tests (8 virtual devices)."""
+    n = math.prod(shape)
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)

@@ -1,0 +1,3 @@
+from . import sharding  # noqa: F401
+
+__all__ = ["sharding"]

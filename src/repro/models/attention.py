@@ -1,0 +1,109 @@
+"""GQA attention: query-chunked training/prefill path + cached decode path.
+
+The training path streams query chunks with ``lax.map`` so the per-chunk
+score tensor is [B, H, q_chunk, T] — bounded activation memory without a
+custom kernel (flash-style chunking; the HLO stays compact because lax.map
+lowers to a scan).  Sliding-window (local) layers and global layers share one
+code path via mask blending, which keeps the scanned-layer HLO single-shaped.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_scores(q, k, scale):
+    """q: [B, Sq, KV, G, dh]; k: [B, T, KV, dh] -> scores [B, KV, G, Sq, T]."""
+    return jnp.einsum("bqkgd,btkd->bkgqt", q, k) * scale
+
+
+def attend_chunked(
+    q, k, v, *,
+    q_positions, kv_positions, causal: bool = True,
+    window: int | None = None, is_local=None,
+    scale: float, q_chunk: int = 512, soft_cap: float | None = None,
+):
+    """Chunked-query GQA attention.
+
+    Args:
+      q: [B, S, n_q, dh] queries (n_q = kv_heads * group).
+      k, v: [B, T, n_kv, dh].
+      q_positions: int32[S]; kv_positions: int32[T] (global positions).
+      window: sliding-window width for local layers.
+      is_local: scalar bool (traced) — blend window mask when True.
+    Returns: [B, S, n_q, dh]
+    """
+    b, s, n_q, dh = q.shape
+    t = k.shape[1]
+    n_kv = k.shape[2]
+    g = n_q // n_kv
+    q = q.reshape(b, s, n_kv, g, dh)
+
+    n_chunks = max(s // q_chunk, 1)
+    chunk = s // n_chunks
+    qc = q.reshape(b, n_chunks, chunk, n_kv, g, dh)
+    pc = q_positions.reshape(n_chunks, chunk)
+
+    if is_local is None:
+        is_local = jnp.asarray(False)
+
+    def one_chunk(args):
+        q_i, pos_i = args                       # [B, chunk, KV, G, dh], [chunk]
+        scores = _gqa_scores(q_i, k, scale)     # [B, KV, G, chunk, T]
+        if soft_cap is not None:
+            scores = jnp.tanh(scores / soft_cap) * soft_cap
+        mask = jnp.ones((chunk, t), bool)
+        if causal:
+            mask &= pos_i[:, None] >= kv_positions[None, :]
+        if window is not None:
+            local = mask & (
+                kv_positions[None, :] > pos_i[:, None] - window
+            )
+            mask = jnp.where(is_local, local, mask)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+        probs = probs.astype(v.dtype)
+        return jnp.einsum("bkgqt,btkd->bqkgd", probs, v)
+
+    out = jax.lax.map(one_chunk, (qc.swapaxes(0, 1), pc))   # [n_chunks, ...]
+    out = out.swapaxes(0, 1).reshape(b, s, n_kv, g, dh)
+    return out.reshape(b, s, n_q, dh)
+
+
+def attend_decode(
+    q, k_cache, v_cache, *, cache_len, window: int | None = None,
+    is_local=None, scale: float, soft_cap: float | None = None,
+):
+    """Single-position decode attention against a (possibly huge) KV cache.
+
+    q: [B, 1, n_q, dh]; k_cache/v_cache: [B, T_max, n_kv, dh];
+    cache_len: scalar int32 — number of valid cache positions (the new
+    token's position is cache_len - 1 after insertion).
+    """
+    b, _, n_q, dh = q.shape
+    t = k_cache.shape[1]
+    n_kv = k_cache.shape[2]
+    g = n_q // n_kv
+    q = q.reshape(b, 1, n_kv, g, dh)
+
+    scores = _gqa_scores(q, k_cache, scale)       # [B, KV, G, 1, T]
+    if soft_cap is not None:
+        scores = jnp.tanh(scores / soft_cap) * soft_cap
+    pos = jnp.arange(t, dtype=jnp.int32)
+    mask = pos[None, :] < cache_len
+    if window is not None:
+        local = mask & (pos[None, :] > cache_len - 1 - window)
+        blended = jnp.where(
+            is_local if is_local is not None else False, local, mask
+        )
+        mask = blended
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    probs = probs.astype(v_cache.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", probs, v_cache)
+    return out.reshape(b, 1, n_q, dh)

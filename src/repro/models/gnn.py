@@ -1,0 +1,259 @@
+"""GNN layers + models via edge-index scatter (segment ops).
+
+JAX sparse is BCOO-only, so message passing is implemented directly over an
+edge list: ``gather(src) -> edge MLP -> segment_sum/max(dst)``.  This *is*
+the system's SpMM/SDDMM substrate (kernels/segment_spmm provides the Pallas
+fast path for the gather-GEMM-scatter hot loop).
+
+Graphs are padded, fixed-shape batches:
+  node_feat [N, F] f32, edge_src/edge_dst int32[E], node_mask bool[N],
+  edge_mask bool[E], plus optional graph_ids int32[N] for batched small
+  graphs and labels.  Invalid edges point at node N-1 with mask 0 and are
+  zeroed inside every aggregation.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from .params import ParamSpec
+
+
+def segment_softmax(scores, segment_ids, num_segments, mask):
+    """Numerically-stable softmax over edges grouped by destination."""
+    scores = jnp.where(mask, scores, -jnp.inf)
+    seg_max = jax.ops.segment_max(scores, segment_ids, num_segments)
+    seg_max = jnp.where(jnp.isfinite(seg_max), seg_max, 0.0)
+    exp = jnp.where(mask, jnp.exp(scores - seg_max[segment_ids]), 0.0)
+    seg_sum = jax.ops.segment_sum(exp, segment_ids, num_segments)
+    return exp / (seg_sum[segment_ids] + 1e-9)
+
+
+def scatter_mean(values, segment_ids, num_segments, mask):
+    vals = jnp.where(mask[:, None], values, 0.0)
+    tot = jax.ops.segment_sum(vals, segment_ids, num_segments)
+    cnt = jax.ops.segment_sum(mask.astype(values.dtype), segment_ids,
+                              num_segments)
+    return tot / (cnt[:, None] + 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    kind: str                  # gcn | gin | gat | gatedgcn
+    n_layers: int
+    d_in: int
+    d_hidden: int
+    n_classes: int
+    n_heads: int = 1
+    readout: str = "node"      # node | graph
+    n_graphs: int = 0          # static graph count for graph readout
+    eps_learnable: bool = True  # GIN
+    dropout: float = 0.0        # structural only; inference-time ignored
+    use_pallas: bool = False
+    remat: bool = True          # checkpoint layer bodies (full-batch bwd)
+    unroll_scans: bool = False  # calibration only (see launch/dryrun)
+
+    def n_params(self) -> int:
+        from .params import count_params
+
+        return count_params(gnn_param_specs(self))
+
+
+def gnn_param_specs(cfg: GNNConfig) -> dict:
+    f32 = jnp.float32
+    l, dh = cfg.n_layers, cfg.d_hidden
+    specs: dict[str, Any] = {
+        "w_in": ParamSpec((cfg.d_in, dh), f32, (None, shd.MODEL)),
+        "b_in": ParamSpec((dh,), f32, (None,), init="zeros"),
+        "w_out": ParamSpec((dh, cfg.n_classes), f32, (None, None)),
+        "b_out": ParamSpec((cfg.n_classes,), f32, (None,), init="zeros"),
+    }
+    layer: dict[str, ParamSpec] = {}
+    if cfg.kind == "gin":
+        layer["mlp_w1"] = ParamSpec((l, dh, dh), f32, (None, None, shd.MODEL))
+        layer["mlp_b1"] = ParamSpec((l, dh), f32, (None, None), init="zeros")
+        layer["mlp_w2"] = ParamSpec((l, dh, dh), f32, (None, shd.MODEL, None))
+        layer["mlp_b2"] = ParamSpec((l, dh), f32, (None, None), init="zeros")
+        layer["eps"] = ParamSpec((l,), f32, (None,), init="zeros")
+    elif cfg.kind == "gat":
+        hd = dh // cfg.n_heads
+        layer["w"] = ParamSpec((l, dh, cfg.n_heads, hd), f32,
+                               (None, None, shd.MODEL, None))
+        layer["a_src"] = ParamSpec((l, cfg.n_heads, hd), f32,
+                                   (None, shd.MODEL, None))
+        layer["a_dst"] = ParamSpec((l, cfg.n_heads, hd), f32,
+                                   (None, shd.MODEL, None))
+    elif cfg.kind == "gatedgcn":
+        for nm in ("wu", "wv", "wa", "wb", "wc"):
+            layer[nm] = ParamSpec((l, dh, dh), f32, (None, None, shd.MODEL))
+        layer["bn_n"] = ParamSpec((l, dh), f32, (None, None), init="zeros")
+        layer["bn_e"] = ParamSpec((l, dh), f32, (None, None), init="zeros")
+        specs["w_edge_in"] = ParamSpec((1, dh), f32, (None, None))
+    else:  # gcn
+        layer["w"] = ParamSpec((l, dh, dh), f32, (None, None, shd.MODEL))
+        layer["b"] = ParamSpec((l, dh), f32, (None, None), init="zeros")
+    specs["layers"] = layer
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# layer forward passes (single layer; stacked via lax.scan)
+# ---------------------------------------------------------------------------
+
+def _gather_agg(h_src_val, edge_dst, n, edge_mask, *, use_pallas=False):
+    if use_pallas:
+        from repro.kernels.segment_spmm import ops as spmm_ops
+
+        return spmm_ops.scatter_sum(h_src_val, edge_dst, n, edge_mask)
+    vals = jnp.where(edge_mask[:, None], h_src_val, 0.0)
+    return jax.ops.segment_sum(vals, edge_dst, num_segments=n)
+
+
+def gcn_layer(h, lp, g, cfg):
+    n = h.shape[0]
+    deg = jax.ops.segment_sum(
+        g["edge_mask"].astype(jnp.float32), g["edge_dst"], n
+    )
+    norm = jax.lax.rsqrt(jnp.maximum(deg, 1.0))
+    msg = h[g["edge_src"]] * norm[g["edge_src"], None]
+    agg = _gather_agg(msg, g["edge_dst"], n, g["edge_mask"],
+                      use_pallas=cfg.use_pallas)
+    agg = agg * norm[:, None]
+    out = agg @ lp["w"] + lp["b"]
+    return jax.nn.relu(out) + h, None
+
+
+def gin_layer(h, lp, g, cfg):
+    n = h.shape[0]
+    agg = _gather_agg(h[g["edge_src"]], g["edge_dst"], n, g["edge_mask"],
+                      use_pallas=cfg.use_pallas)
+    mixed = (1.0 + lp["eps"]) * h + agg
+    out = jax.nn.relu(mixed @ lp["mlp_w1"] + lp["mlp_b1"])
+    out = out @ lp["mlp_w2"] + lp["mlp_b2"]
+    return jax.nn.relu(out) + h, None
+
+
+def gat_layer(h, lp, g, cfg):
+    n = h.shape[0]
+    hd = cfg.d_hidden // cfg.n_heads
+    hw = jnp.einsum("nd,dhk->nhk", h, lp["w"])            # [N, H, hd]
+    s_src = jnp.einsum("nhk,hk->nh", hw, lp["a_src"])
+    s_dst = jnp.einsum("nhk,hk->nh", hw, lp["a_dst"])
+    scores = jax.nn.leaky_relu(
+        s_src[g["edge_src"]] + s_dst[g["edge_dst"]], 0.2
+    )                                                      # [E, H]
+    alpha = jax.vmap(
+        lambda s: segment_softmax(s, g["edge_dst"], n, g["edge_mask"]),
+        in_axes=1, out_axes=1,
+    )(scores)                                              # [E, H]
+    msg = hw[g["edge_src"]] * alpha[..., None]             # [E, H, hd]
+    agg = _gather_agg(
+        msg.reshape(msg.shape[0], -1), g["edge_dst"], n, g["edge_mask"],
+        use_pallas=cfg.use_pallas,
+    )
+    out = jax.nn.elu(agg.reshape(n, cfg.d_hidden))
+    return out + h, None
+
+
+def gatedgcn_layer(state, lp, g, cfg):
+    h, e = state
+    n = h.shape[0]
+    src, dst = g["edge_src"], g["edge_dst"]
+    gate_in = h[src] @ lp["wa"] + h[dst] @ lp["wb"] + e @ lp["wc"]
+    e_new = gate_in                                        # new edge features
+    eta = jax.nn.sigmoid(e_new)
+    msg = eta * (h[src] @ lp["wv"])
+    num = _gather_agg(msg, dst, n, g["edge_mask"], use_pallas=cfg.use_pallas)
+    den = _gather_agg(eta, dst, n, g["edge_mask"], use_pallas=cfg.use_pallas)
+    agg = num / (den + 1e-6)
+    h_new = h @ lp["wu"] + agg
+    # lightweight norm standing in for batchnorm (full-batch graphs)
+    h_new = h_new - h_new.mean(-1, keepdims=True)
+    h_new = h_new / (h_new.std(-1, keepdims=True) + 1e-6) * (
+        1.0 + lp["bn_n"]
+    )
+    e_new = e_new - e_new.mean(-1, keepdims=True)
+    e_new = e_new / (e_new.std(-1, keepdims=True) + 1e-6) * (
+        1.0 + lp["bn_e"]
+    )
+    return (jax.nn.relu(h_new) + h, jax.nn.relu(e_new) + e), None
+
+
+# ---------------------------------------------------------------------------
+# model forward
+# ---------------------------------------------------------------------------
+
+def forward(params, g, cfg: GNNConfig, mesh=None):
+    """g: graph batch dict -> logits ([N, classes] or [G, classes])."""
+    h = g["node_feat"] @ params["w_in"] + params["b_in"]
+    h = jax.nn.relu(h)
+    h = shd.constrain(h, mesh, shd.BATCH, None)
+
+    big = g["edge_src"].shape[0] > 1_000_000
+
+    def _constrain_state(s):
+        # node tensors over (pod, data); edge tensors over the whole mesh
+        # when the graph is large enough to amortize the finer sharding
+        def one(a):
+            spec = (shd.EDGE if big else shd.BATCH) \
+                if a.shape[0] == g["edge_src"].shape[0] else shd.BATCH
+            return shd.constrain(a, mesh, spec, None)
+
+        return jax.tree.map(one, s)
+
+    if cfg.kind == "gatedgcn":
+        e = jnp.ones((g["edge_src"].shape[0], 1)) @ params["w_edge_in"]
+        base_fn = lambda s, lp: gatedgcn_layer(s, lp, g, cfg)
+        state = (h, e)
+    else:
+        layer_fn = {"gcn": gcn_layer, "gin": gin_layer, "gat": gat_layer}[
+            cfg.kind
+        ]
+        base_fn = lambda s, lp: layer_fn(s, lp, g, cfg)
+        state = h
+
+    def layer(s, lp):
+        # constrain both the consumed and the saved (carried) state so the
+        # scan's per-layer checkpoints stay sharded across the whole mesh
+        out, aux = base_fn(_constrain_state(s), lp)
+        return _constrain_state(out), aux
+
+    state = _constrain_state(state)
+    if cfg.remat:
+        layer = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    state, _ = jax.lax.scan(layer, state, params["layers"],
+                            unroll=cfg.unroll_scans)
+    h = state[0] if cfg.kind == "gatedgcn" else state
+
+    h = jnp.where(g["node_mask"][:, None], h, 0.0)
+    if cfg.readout == "graph":
+        pooled = jax.ops.segment_sum(
+            h, g["graph_ids"], num_segments=cfg.n_graphs
+        )
+        return pooled @ params["w_out"] + params["b_out"]
+    return h @ params["w_out"] + params["b_out"]
+
+
+def loss_fn(params, batch, cfg: GNNConfig, mesh=None):
+    logits = forward(params, batch, cfg, mesh)
+    if cfg.n_classes == 1:   # regression (molecule energies)
+        target = batch["targets"].astype(jnp.float32)
+        return jnp.mean(jnp.square(logits[:, 0] - target))
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if cfg.readout == "graph":
+        return jnp.mean(nll)
+    mask = batch["node_mask"].astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,66 @@
+"""Shared NN layers: RMSNorm, rotary embeddings, SwiGLU MLP (pure jnp)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x, weight, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def rope_frequencies(d_head: int, theta: float):
+    return theta ** (
+        -jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head
+    )
+
+
+def apply_rope(x, positions, *, theta: float = 10_000.0):
+    """Rotary position embedding.
+
+    x: [..., seq, heads, d_head]; positions: [..., seq] int32.
+    """
+    d_head = x.shape[-1]
+    freqs = rope_frequencies(d_head, theta)                  # [d/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., s, d/2]
+    angles = angles[..., None, :]                            # [..., s, 1, d/2]
+    sin, cos = jnp.sin(angles), jnp.cos(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    """SwiGLU MLP: silu(x @ w_gate) * (x @ w_up) @ w_down."""
+    dtype = x.dtype
+    gate = jnp.einsum("...d,df->...f", x, w_gate.astype(dtype))
+    up = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    hidden = jax.nn.silu(gate.astype(jnp.float32)).astype(dtype) * up
+    return jnp.einsum("...f,fd->...d", hidden, w_down.astype(dtype))
+
+
+def gelu_mlp(x, w_up, w_down):
+    dtype = x.dtype
+    h = jnp.einsum("...d,df->...f", x, w_up.astype(dtype))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(dtype)
+    return jnp.einsum("...f,fd->...d", h, w_down.astype(dtype))
+
+
+def cross_entropy_loss(logits, targets, *, z_loss: float = 0.0):
+    """Mean token cross-entropy at fp32 with optional z-loss."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, targets[..., None].astype(jnp.int32), axis=-1
+    )[..., 0]
+    loss = logz - gold
+    if z_loss:
+        loss = loss + z_loss * jnp.square(logz)
+    return jnp.mean(loss)

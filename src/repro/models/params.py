@@ -1,0 +1,79 @@
+"""Parameter declaration: shapes + dtypes + logical shardings in one tree.
+
+No flax in this environment — parameters are plain pytrees (nested dicts of
+``jnp`` arrays).  Each model declares a matching tree of :class:`ParamSpec`;
+from it we derive ShapeDtypeStructs (dry-run), NamedShardings (pjit) and
+initialized arrays (smoke tests / real training).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+
+
+class ParamSpec(NamedTuple):
+    shape: tuple
+    dtype: any = jnp.float32
+    logical: tuple = ()          # logical partition spec, same rank as shape
+    init: str = "normal"         # normal | zeros | ones | embed
+    scale: float | None = None   # stddev override
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def tree_sds(specs):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs,
+        is_leaf=is_spec,
+    )
+
+
+def tree_shardings(mesh, specs):
+    return jax.tree.map(
+        lambda s: shd.named_sharding(mesh, s.logical, s.shape), specs,
+        is_leaf=is_spec,
+    )
+
+
+def _fan_in(shape) -> int:
+    if len(shape) == 1:
+        return shape[0]
+    return int(np.prod(shape[:-1]))
+
+
+def init_param(key, spec: ParamSpec):
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "embed":
+        scale = spec.scale or 1.0
+        return (
+            jax.random.normal(key, spec.shape, jnp.float32) * scale
+        ).astype(spec.dtype)
+    scale = spec.scale or 1.0 / np.sqrt(max(_fan_in(spec.shape), 1))
+    return (
+        jax.random.normal(key, spec.shape, jnp.float32) * scale
+    ).astype(spec.dtype)
+
+
+def tree_init(key, specs):
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [init_param(k, s) for k, s in zip(keys, leaves)]
+    )
+
+
+def count_params(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return int(sum(np.prod(s.shape) for s in leaves))

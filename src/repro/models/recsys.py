@@ -1,0 +1,161 @@
+"""DCN-v2 ranking model [arXiv:2008.13535] + two-tower retrieval scoring.
+
+The hot path is the sparse embedding lookup: JAX has no native EmbeddingBag,
+so bags are ``jnp.take`` + masked weighted-sum (kernels/embedding_bag holds
+the Pallas fast path).  Tables are row-sharded over the ``model`` axis — the
+tables *are* the memory footprint; GSPMD turns the gathers into all-to-all
+style collectives, which is exactly a production embedding shard layout.
+
+Structure (stacked DCN-v2): x0 = [dense || embedding bags] -> n cross layers
+``x_{l+1} = x0 * (W x_l + b) + x_l`` -> deep MLP -> logit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import sharding as shd
+from .params import ParamSpec
+
+
+# Criteo-like vocabulary spread: a few huge fields, a body of medium ones
+DEFAULT_VOCABS = tuple(
+    [10_000_000, 8_000_000] + [1_000_000] * 4 + [100_000] * 8
+    + [10_000] * 7 + [1_000] * 5
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class DCNConfig:
+    name: str
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 16
+    n_cross_layers: int = 3
+    mlp: tuple = (1024, 1024, 512)
+    vocab_sizes: tuple = DEFAULT_VOCABS
+    bag_size: int = 4             # multi-hot ids per field (padded)
+    d_retrieval: int = 64
+    n_items: int = 4_000_000      # retrieval corpus size
+    use_pallas: bool = False
+
+    @property
+    def d_interact(self) -> int:
+        return self.n_dense + self.n_sparse * self.embed_dim
+
+    def n_params(self) -> int:
+        from .params import count_params
+
+        return count_params(dcn_param_specs(self))
+
+
+def dcn_param_specs(cfg: DCNConfig) -> dict:
+    f32 = jnp.float32
+    d = cfg.d_interact
+    specs: dict = {
+        "tables": {
+            f"t{i}": ParamSpec((v, cfg.embed_dim), f32, (shd.MODEL, None),
+                               init="embed", scale=cfg.embed_dim ** -0.5)
+            for i, v in enumerate(cfg.vocab_sizes)
+        },
+        "cross_w": ParamSpec((cfg.n_cross_layers, d, d), f32,
+                             (None, None, shd.MODEL)),
+        "cross_b": ParamSpec((cfg.n_cross_layers, d), f32, (None, None),
+                             init="zeros"),
+        "item_table": ParamSpec((cfg.n_items, cfg.d_retrieval), f32,
+                                (shd.MODEL, None), init="embed",
+                                scale=cfg.d_retrieval ** -0.5),
+        "query_proj": ParamSpec((cfg.mlp[-1], cfg.d_retrieval), f32,
+                                (None, None)),
+    }
+    dims = (d,) + tuple(cfg.mlp)
+    for i in range(len(cfg.mlp)):
+        specs[f"mlp_w{i}"] = ParamSpec((dims[i], dims[i + 1]), f32,
+                                       (None, shd.MODEL if i == 0 else None))
+        specs[f"mlp_b{i}"] = ParamSpec((dims[i + 1],), f32, (None,),
+                                       init="zeros")
+    specs["out_w"] = ParamSpec((cfg.mlp[-1], 1), f32, (None, None))
+    specs["out_b"] = ParamSpec((1,), f32, (None,), init="zeros")
+    return specs
+
+
+def embedding_bag(table, ids, weights, *, use_pallas=False):
+    """Sum-reduce a bag of rows: ids [B, bag], weights [B, bag] -> [B, D]."""
+    if use_pallas:
+        from repro.kernels.embedding_bag import ops as bag_ops
+
+        return bag_ops.embedding_bag(table, ids, weights)
+    rows = jnp.take(table, ids, axis=0)              # [B, bag, D]
+    return jnp.einsum("bkd,bk->bd", rows, weights)
+
+
+def interact_features(params, dense, sparse_ids, sparse_weights, cfg,
+                      mesh=None):
+    """Build x0 = [dense || 26 embedding bags]."""
+    bags = []
+    for i in range(cfg.n_sparse):
+        bags.append(embedding_bag(
+            params["tables"][f"t{i}"], sparse_ids[:, i],
+            sparse_weights[:, i], use_pallas=cfg.use_pallas,
+        ))
+    x0 = jnp.concatenate([dense] + bags, axis=-1)
+    return shd.constrain(x0, mesh, shd.BATCH, None)
+
+
+def forward(params, batch, cfg: DCNConfig, mesh=None):
+    """batch: dense [B, 13] f32, sparse_ids [B, 26, bag] i32,
+    sparse_weights [B, 26, bag] f32 -> logits [B]."""
+    x0 = interact_features(
+        params, batch["dense"], batch["sparse_ids"],
+        batch["sparse_weights"], cfg, mesh,
+    )
+    x = x0
+    for i in range(cfg.n_cross_layers):
+        w = params["cross_w"][i]
+        b = params["cross_b"][i]
+        x = x0 * (x @ w + b) + x          # DCN-v2 cross
+    h = x
+    for i in range(len(cfg.mlp)):
+        h = jax.nn.relu(h @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"])
+    logit = h @ params["out_w"] + params["out_b"]
+    return logit[:, 0]
+
+
+def loss_fn(params, batch, cfg: DCNConfig, mesh=None):
+    logits = forward(params, batch, cfg, mesh).astype(jnp.float32)
+    y = batch["labels"].astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def query_embedding(params, batch, cfg: DCNConfig, mesh=None):
+    """User/query tower: DCN trunk -> d_retrieval embedding."""
+    x0 = interact_features(
+        params, batch["dense"], batch["sparse_ids"],
+        batch["sparse_weights"], cfg, mesh,
+    )
+    h = x0
+    for i in range(len(cfg.mlp)):
+        h = jax.nn.relu(h @ params[f"mlp_w{i}"] + params[f"mlp_b{i}"])
+    q = h @ params["query_proj"]
+    return q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-9)
+
+
+def retrieval_step(params, batch, candidate_ids, cfg: DCNConfig, mesh=None,
+                   top_k: int = 100):
+    """Score one query against a candidate corpus slice (batched dot).
+
+    candidate_ids: int32[n_cand] -> (top scores [B, k], top ids [B, k]).
+    """
+    q = query_embedding(params, batch, cfg, mesh)         # [B, dr]
+    items = jnp.take(params["item_table"], candidate_ids, axis=0)
+    scores = q @ items.T                                  # [B, n_cand]
+    scores = shd.constrain(scores, mesh, None, shd.MODEL)
+    top_s, top_i = jax.lax.top_k(scores, top_k)
+    return top_s, jnp.take(candidate_ids, top_i)

@@ -1,0 +1,70 @@
+"""Logical-axis sharding resolver.
+
+Models annotate arrays with *logical* partition specs (tuples of mesh-axis
+names / axis groups / None).  ``resolve`` adapts a logical spec to a concrete
+mesh: axes missing from the mesh are dropped, and any axis group that does
+not divide the corresponding dimension is dropped (e.g. 8 KV heads cannot
+shard over a 16-way ``model`` axis → replicated; batch=1 in ``long_500k``
+→ replicated).  This keeps one set of model annotations valid across the
+single-pod (16,16), multi-pod (2,16,16) and 1-device CPU test meshes.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+# logical spec vocabulary used by the models
+BATCH = ("pod", "data")     # batch dim: DP over pods and the data axis
+FSDP = "data"               # parameter shards gathered on use
+MODEL = "model"             # tensor parallel axis
+SEQ = ("data", "model")     # sequence sharding for giant KV caches (batch=1)
+EDGE = ("pod", "data", "model")  # GNN edge streams: use the whole mesh
+
+
+def _axes_in_mesh(entry, mesh) -> tuple[str, ...]:
+    if entry is None:
+        return ()
+    if isinstance(entry, str):
+        entry = (entry,)
+    return tuple(a for a in entry if a in mesh.shape)
+
+
+def resolve(spec, shape, mesh) -> P:
+    """Adapt a logical spec to `mesh` given the concrete `shape`.
+
+    Drops axes that are absent from the mesh, do not divide the dimension,
+    or were already consumed by an earlier dimension (e.g. batch=1 frees
+    ``data`` for the KV-cache sequence dim in ``long_500k``).
+    """
+    out = []
+    used: set[str] = set()
+    for dim, entry in enumerate(spec):
+        axes = [a for a in _axes_in_mesh(entry, mesh) if a not in used]
+        # shrink the axis group until it divides the dimension
+        while axes and shape[dim] % math.prod(
+            mesh.shape[a] for a in axes
+        ) != 0:
+            axes = axes[:-1]
+        if axes:
+            used.update(axes)
+            out.append(axes[0] if len(axes) == 1 else tuple(axes))
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def named_sharding(mesh, spec, shape) -> NamedSharding:
+    return NamedSharding(mesh, resolve(spec, shape, mesh))
+
+
+def constrain(x, mesh, *spec):
+    """with_sharding_constraint using the logical resolver (no-op on 1 dev)."""
+    if mesh is None or np.prod(list(mesh.shape.values())) == 1:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, resolve(spec, x.shape, mesh))
+    )

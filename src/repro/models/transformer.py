@@ -1,0 +1,363 @@
+"""Decoder-only transformer LM (dense + MoE) with scan-over-layers.
+
+Design points for 512-chip lowering:
+  * layer parameters are stacked on a leading [L] axis and consumed by
+    ``lax.scan`` — HLO size is depth-independent (compile time and SPMD
+    partitioning stay tractable for 80-layer × 512-device dry-runs);
+  * every parameter carries a *logical* partition spec (see models.sharding):
+    d_model dims shard over ``data`` (FSDP, gathered on use), head/FF/expert
+    dims over ``model`` (TP/EP), batch over ``(pod, data)``;
+  * local/global attention patterns (gemma3's 5:1) blend masks inside one
+    code path so the scanned layer body stays single-shaped;
+  * KV caches shard their sequence dim over whatever axes the batch leaves
+    free — 524k-token caches spread over the full mesh when batch=1.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, moe as moe_lib, sharding as shd
+from .layers import cross_entropy_loss, rms_norm, apply_rope, swiglu
+from .params import ParamSpec, tree_init, tree_sds
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    rope_theta: float = 1e4
+    rope_theta_local: float | None = None
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    embed_scale: bool = False
+    window: int | None = None         # sliding window for local layers
+    pattern_local: int = 0            # e.g. 5 local : 1 global (gemma3)
+    pattern_global: int = 1
+    # MoE
+    moe: bool = False
+    n_experts: int = 0
+    top_k: int = 0
+    d_ff_expert: int = 0
+    n_shared_experts: int = 0
+    dense_residual: bool = False      # arctic: dense FFN parallel to MoE
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # numerics / memory
+    dtype: Any = jnp.bfloat16
+    remat: str = "full"               # full | dots | none
+    q_chunk: int = 512
+    unroll_scans: bool = False        # calibration only (see launch/dryrun)
+    gather_dtype: str = "f32"         # "bf16": cast params before FSDP
+                                      # gathers (halves collective traffic)
+    microbatch_override: int = 0      # force grad-accumulation factor
+
+    @property
+    def has_dense_mlp(self) -> bool:
+        return (not self.moe) or self.dense_residual
+
+    def n_params(self) -> int:
+        from .params import count_params
+
+        return count_params(param_specs(self))
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    l, d = cfg.n_layers, cfg.d_model
+    h, kv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    f32 = jnp.float32
+    layer: dict[str, ParamSpec] = {
+        "ln1": ParamSpec((l, d), f32, (None, None), init="zeros"),
+        "ln2": ParamSpec((l, d), f32, (None, None), init="zeros"),
+        "wq": ParamSpec((l, d, h, dh), f32, (None, shd.FSDP, shd.MODEL, None)),
+        "wk": ParamSpec((l, d, kv, dh), f32, (None, shd.FSDP, shd.MODEL, None)),
+        "wv": ParamSpec((l, d, kv, dh), f32, (None, shd.FSDP, shd.MODEL, None)),
+        "wo": ParamSpec((l, h, dh, d), f32, (None, shd.MODEL, None, shd.FSDP)),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = ParamSpec((l, h, dh), f32, (None, shd.MODEL, None),
+                                init="zeros")
+        layer["bk"] = ParamSpec((l, kv, dh), f32, (None, shd.MODEL, None),
+                                init="zeros")
+        layer["bv"] = ParamSpec((l, kv, dh), f32, (None, shd.MODEL, None),
+                                init="zeros")
+    if cfg.has_dense_mlp:
+        f = cfg.d_ff
+        layer["wg"] = ParamSpec((l, d, f), f32, (None, shd.FSDP, shd.MODEL))
+        layer["wu"] = ParamSpec((l, d, f), f32, (None, shd.FSDP, shd.MODEL))
+        layer["wd"] = ParamSpec((l, f, d), f32, (None, shd.MODEL, shd.FSDP))
+    if cfg.moe:
+        e, fe = cfg.n_experts, cfg.d_ff_expert
+        layer["w_router"] = ParamSpec((l, d, e), f32, (None, shd.FSDP, None))
+        # experts over `model` (EP), d_model FSDP over `data` (gathered
+        # on use — matches the dispatch buffer's [E(model), C(data), D]
+        # layout so the expert GEMMs need no activation resharding)
+        layer["we_gate"] = ParamSpec(
+            (l, e, d, fe), f32, (None, shd.MODEL, shd.FSDP, None))
+        layer["we_up"] = ParamSpec(
+            (l, e, d, fe), f32, (None, shd.MODEL, shd.FSDP, None))
+        layer["we_down"] = ParamSpec(
+            (l, e, fe, d), f32, (None, shd.MODEL, None, shd.FSDP))
+        if cfg.n_shared_experts:
+            fs = cfg.n_shared_experts * fe
+            layer["ws_gate"] = ParamSpec(
+                (l, d, fs), f32, (None, shd.FSDP, shd.MODEL))
+            layer["ws_up"] = ParamSpec(
+                (l, d, fs), f32, (None, shd.FSDP, shd.MODEL))
+            layer["ws_down"] = ParamSpec(
+                (l, fs, d), f32, (None, shd.MODEL, shd.FSDP))
+    specs = {
+        "embed": ParamSpec((cfg.vocab, d), f32, (shd.MODEL, None),
+                           init="embed", scale=d ** -0.5),
+        "layers": layer,
+        "final_norm": ParamSpec((d,), f32, (None,), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = ParamSpec((d, cfg.vocab), f32,
+                                     (shd.FSDP, shd.MODEL))
+    return specs
+
+
+def init_params(key, cfg: TransformerConfig):
+    return tree_init(key, param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _is_local_layer(cfg: TransformerConfig, idx):
+    if cfg.window is None or cfg.pattern_local == 0:
+        return jnp.asarray(False)
+    period = cfg.pattern_local + cfg.pattern_global
+    return (idx % period) < cfg.pattern_local
+
+
+def _rope_theta(cfg: TransformerConfig, is_local):
+    if cfg.rope_theta_local is None:
+        return cfg.rope_theta
+    return jnp.where(is_local, cfg.rope_theta_local, cfg.rope_theta)
+
+
+def _apply_rope_blended(x, positions, cfg, is_local):
+    """RoPE with per-layer theta (local vs global layers)."""
+    if cfg.rope_theta_local is None:
+        return apply_rope(x, positions, theta=cfg.rope_theta)
+    a = apply_rope(x, positions, theta=cfg.rope_theta)
+    b = apply_rope(x, positions, theta=cfg.rope_theta_local)
+    return jnp.where(is_local, b, a)
+
+
+def _layer_fwd(cfg: TransformerConfig, mesh, x, lp, idx, positions):
+    """One decoder layer. x: [B, S, D] (bf16); lp: per-layer param slice."""
+    dt = cfg.dtype
+    scale = cfg.d_head ** -0.5
+    is_local = _is_local_layer(cfg, idx)
+
+    h = rms_norm(x, lp["ln1"])
+    q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(dt))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(dt)
+        k = k + lp["bk"].astype(dt)
+        v = v + lp["bv"].astype(dt)
+    q = _apply_rope_blended(q, positions[None, :], cfg, is_local)
+    k = _apply_rope_blended(k, positions[None, :], cfg, is_local)
+    q = shd.constrain(q, mesh, shd.BATCH, None, shd.MODEL, None)
+    k = shd.constrain(k, mesh, shd.BATCH, None, shd.MODEL, None)
+
+    out = attention.attend_chunked(
+        q, k, v, q_positions=positions, kv_positions=positions,
+        causal=True, window=cfg.window, is_local=is_local, scale=scale,
+        q_chunk=min(cfg.q_chunk, x.shape[1]),
+    )
+    out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(dt))
+    x = x + shd.constrain(out, mesh, shd.BATCH, None, None)
+
+    h = rms_norm(x, lp["ln2"])
+    mlp_out = 0.0
+    if cfg.has_dense_mlp:
+        mlp_out = swiglu(h, lp["wg"], lp["wu"], lp["wd"])
+    aux = jnp.asarray(0.0, jnp.float32)
+    if cfg.moe:
+        b, s, d = h.shape
+        flat = h.reshape(b * s, d)
+        moe_out = moe_lib.moe_block(
+            flat, w_router=lp["w_router"], w_gate=lp["we_gate"],
+            w_up=lp["we_up"], w_down=lp["we_down"], top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, mesh=mesh,
+        ).reshape(b, s, d)
+        mlp_out = mlp_out + moe_out
+        if cfg.n_shared_experts:
+            mlp_out = mlp_out + swiglu(
+                h, lp["ws_gate"], lp["ws_up"], lp["ws_down"]
+            )
+        aux = moe_lib.aux_load_balance_loss(
+            flat, lp["w_router"], top_k=cfg.top_k
+        )
+    x = x + shd.constrain(mlp_out, mesh, shd.BATCH, None, None)
+    return x, aux
+
+
+def _remat_policy(cfg: TransformerConfig):
+    if cfg.remat == "full":
+        return jax.checkpoint_policies.nothing_saveable
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.everything_saveable
+
+
+def forward(params, tokens, cfg: TransformerConfig, mesh=None):
+    """tokens [B, S] -> logits [B, S, V] (f32), aux losses."""
+    dt = cfg.dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    x = shd.constrain(x, mesh, shd.BATCH, None, None)
+    positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    layer_params = params["layers"]
+    if cfg.gather_dtype == "bf16":
+        # cast while still FSDP-sharded: the per-layer all-gathers inside
+        # the scan then move bf16 payloads (2x less collective traffic)
+        layer_params = jax.tree.map(
+            lambda w: w.astype(cfg.dtype), layer_params)
+
+    layer_fn = functools.partial(_layer_fwd, cfg, mesh)
+    layer_fn = jax.checkpoint(
+        layer_fn, policy=_remat_policy(cfg), static_argnums=()
+    )
+
+    def body(carry, scanned):
+        lp, idx = scanned
+        x = carry
+        x, aux = layer_fn(x, lp, idx, positions)
+        return x, aux
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    x, auxes = jax.lax.scan(body, x, (layer_params, idxs),
+                            unroll=cfg.unroll_scans)
+
+    x = rms_norm(x, params["final_norm"])
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))
+    logits = shd.constrain(logits, mesh, shd.BATCH, None, shd.MODEL)
+    return logits.astype(jnp.float32), jnp.sum(auxes)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig, mesh=None):
+    logits, aux = forward(params, batch["tokens"], cfg, mesh)
+    loss = cross_entropy_loss(logits, batch["targets"])
+    if cfg.moe:
+        loss = loss + cfg.aux_loss_weight * aux / cfg.n_layers
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# serving (decode with KV cache)
+# ---------------------------------------------------------------------------
+
+def cache_specs(cfg: TransformerConfig, batch: int, max_len: int) -> dict:
+    l, kv, dh = cfg.n_layers, cfg.n_kv_heads, cfg.d_head
+    shape = (l, batch, max_len, kv, dh)
+    logical = (None, shd.BATCH, shd.SEQ, shd.MODEL, None)
+    return {
+        "k": ParamSpec(shape, cfg.dtype, logical, init="zeros"),
+        "v": ParamSpec(shape, cfg.dtype, logical, init="zeros"),
+    }
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_len: int):
+    return tree_init(jax.random.PRNGKey(0), cache_specs(cfg, batch, max_len))
+
+
+def serve_step(params, cache, tokens, cache_len, cfg: TransformerConfig,
+               mesh=None):
+    """Decode one token. tokens [B, 1]; cache_len: valid entries so far.
+
+    Returns (logits [B, V], updated cache).
+    """
+    dt = cfg.dtype
+    scale = cfg.d_head ** -0.5
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), dt)
+    pos = jnp.full((1,), cache_len, jnp.int32)   # position of the new token
+
+    def body(carry, scanned):
+        x = carry
+        lp, k_cache, v_cache, idx = scanned
+        is_local = _is_local_layer(cfg, idx)
+        h = rms_norm(x, lp["ln1"])
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"].astype(dt))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"].astype(dt))
+        if cfg.qkv_bias:
+            q = q + lp["bq"].astype(dt)
+            k = k + lp["bk"].astype(dt)
+            v = v + lp["bv"].astype(dt)
+        q = _apply_rope_blended(q, pos[None, :], cfg, is_local)
+        k = _apply_rope_blended(k, pos[None, :], cfg, is_local)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k, (0, cache_len, 0, 0)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v, (0, cache_len, 0, 0)
+        )
+        out = attention.attend_decode(
+            q, k_cache, v_cache, cache_len=cache_len + 1,
+            window=cfg.window, is_local=is_local, scale=scale,
+        )
+        out = jnp.einsum("bshk,hkd->bsd", out, lp["wo"].astype(dt))
+        x = x + out
+
+        h2 = rms_norm(x, lp["ln2"])
+        mlp_out = 0.0
+        if cfg.has_dense_mlp:
+            mlp_out = swiglu(h2, lp["wg"], lp["wu"], lp["wd"])
+        if cfg.moe:
+            b, s, d = h2.shape
+            moe_out = moe_lib.moe_block(
+                h2.reshape(b * s, d), w_router=lp["w_router"],
+                w_gate=lp["we_gate"], w_up=lp["we_up"],
+                w_down=lp["we_down"], top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, mesh=mesh,
+            ).reshape(b, s, d)
+            mlp_out = mlp_out + moe_out
+            if cfg.n_shared_experts:
+                mlp_out = mlp_out + swiglu(
+                    h2, lp["ws_gate"], lp["ws_up"], lp["ws_down"]
+                )
+        x = x + mlp_out
+        return x, (k_cache, v_cache)
+
+    idxs = jnp.arange(cfg.n_layers, dtype=jnp.int32)
+    x, (new_k, new_v) = jax.lax.scan(
+        body, x, (params["layers"], cache["k"], cache["v"], idxs),
+        unroll=cfg.unroll_scans,
+    )
+    x = rms_norm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))[:, 0]
+    new_cache = {"k": new_k, "v": new_v}
+    return logits.astype(jnp.float32), new_cache

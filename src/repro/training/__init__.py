@@ -1,0 +1,3 @@
+from . import checkpoint, elastic, optimizer, train_loop
+
+__all__ = ["checkpoint", "elastic", "optimizer", "train_loop"]

@@ -1,0 +1,45 @@
+"""Elastic scaling: restart the same job on a different mesh shape.
+
+Checkpoints store *global* arrays (see training.checkpoint), so elasticity
+reduces to (1) picking a new mesh from the surviving device set, and
+(2) re-deriving shardings for that mesh from the models' *logical* specs —
+``models.sharding.resolve`` already drops axes that no longer divide.  This
+module provides the mesh-selection policy and a resharding helper; the
+multi-pod dry-run exercises both mesh shapes end to end.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def choose_mesh_shape(n_devices: int, *, model_parallel: int = 16,
+                      pod_size: int = 256) -> tuple[tuple, tuple]:
+    """Pick (shape, axis_names) for a possibly-degraded device count.
+
+    Policy: keep the ``model`` axis fixed (TP degree is a property of the
+    architecture), give whole pods a ``pod`` axis, and absorb stragglers by
+    shrinking ``data`` — the largest (pods * data * model) <= n_devices.
+    """
+    model = min(model_parallel, n_devices)
+    while n_devices % model:
+        model //= 2
+    rest = n_devices // model
+    if rest * model >= 2 * pod_size and rest % (pod_size // model) == 0:
+        pods = rest // (pod_size // model)
+        data = pod_size // model
+        return (pods, data, model), ("pod", "data", "model")
+    return (rest, model), ("data", "model")
+
+
+def make_mesh_for(n_devices: int, **kw) -> jax.sharding.Mesh:
+    shape, names = choose_mesh_shape(n_devices, **kw)
+    devs = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
+    return jax.sharding.Mesh(devs, names)
+
+
+def reshard(tree, shardings):
+    """Move a (restored) global tree onto new shardings."""
+    return jax.tree.map(jax.device_put, tree, shardings)

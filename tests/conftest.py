@@ -1,0 +1,21 @@
+"""Shared test helpers. NB: XLA_FLAGS device-count overrides are only ever
+set in subprocess tests — the main process must see 1 CPU device."""
+
+import numpy as np
+import pytest
+
+from repro.core.temporal_graph import TemporalGraph, from_edges
+
+
+def random_graph(seed: int, n_edges: int, n_nodes: int,
+                 t_span: int) -> TemporalGraph:
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, n_nodes, n_edges)
+    v = rng.integers(0, n_nodes, n_edges)
+    t = np.sort(rng.integers(0, t_span, n_edges))
+    return from_edges(u, v, t)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,120 @@
+"""End-to-end PTMT correctness: oracle equivalence + Lemma 4.2 exactness.
+
+This is the paper's Fig. 7 ("complete consistency validation") at test scale:
+the partitioned parallel pipeline must reproduce the sequential TMC-analog
+and the brute-force oracle *exactly*, for every motif code.
+"""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import discover, discover_sequential, oracle
+from repro.data import synthetic_graphs as sg
+from conftest import random_graph
+
+
+def assert_counts_equal(a: dict, b: dict, tag=""):
+    keys = set(a) | set(b)
+    bad = {k: (a.get(k, 0), b.get(k, 0)) for k in keys
+           if a.get(k, 0) != b.get(k, 0)}
+    assert not bad, f"{tag}: {len(bad)} mismatching codes, e.g. " \
+                    f"{dict(list(bad.items())[:5])}"
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    st.tuples(st.integers(0, 10_000), st.integers(1, 120),
+              st.integers(1, 15), st.integers(1, 600)),
+    st.integers(1, 30), st.integers(1, 6), st.integers(2, 5),
+)
+def test_partitioned_matches_oracle(gp, delta, l_max, omega):
+    """Lemma 4.2: inclusion-exclusion over zones is exact."""
+    g = random_graph(*gp)
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    got = discover(g, delta=delta, l_max=l_max, omega=omega)
+    assert got.overflow == 0
+    assert_counts_equal(expect, got.counts, "partitioned vs oracle")
+
+
+@settings(deadline=None, max_examples=10)
+@given(
+    st.tuples(st.integers(0, 10_000), st.integers(1, 100),
+              st.integers(1, 10), st.integers(1, 400)),
+    st.integers(1, 25), st.integers(1, 5),
+)
+def test_sequential_matches_oracle(gp, delta, l_max):
+    g = random_graph(*gp)
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    got = discover_sequential(g, delta=delta, l_max=l_max)
+    assert_counts_equal(expect, got.counts, "sequential vs oracle")
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 100), st.integers(2, 4))
+def test_partitioned_matches_sequential_bursty(seed, omega):
+    """Accuracy validation on the bursty regime (paper Section 5.2)."""
+    g = sg.bursty_stream(500, 12, seed=seed)
+    seq = discover_sequential(g, delta=75, l_max=5)
+    par = discover(g, delta=75, l_max=5, omega=omega)
+    assert_counts_equal(seq.counts, par.counts, "par vs seq")
+
+
+def test_total_process_count_equals_edges():
+    """Every edge seeds exactly one process (no-fork property)."""
+    g = sg.poisson_stream(800, 40, rate=0.5, seed=9)
+    res = discover(g, delta=20, l_max=4, omega=3)
+    assert res.total_processes() == g.n_edges
+
+
+def test_adaptive_capacity_still_exact():
+    g = sg.bursty_stream(600, 10, seed=3)
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, 120, 6))
+    got = discover(g, delta=120, l_max=6, omega=4, e_cap=64)
+    assert got.overflow == 0
+    assert_counts_equal(expect, got.counts, "adaptive-cap")
+
+
+def test_zone_chunking_invariance():
+    g = sg.poisson_stream(400, 15, rate=1.0, seed=5)
+    a = discover(g, delta=15, l_max=4, omega=2, zone_chunk=None)
+    b = discover(g, delta=15, l_max=4, omega=2, zone_chunk=2)
+    assert_counts_equal(a.counts, b.counts, "chunked vs unchunked")
+
+
+def test_self_loops_and_ties():
+    rng = np.random.default_rng(17)
+    n = 150
+    u = rng.integers(0, 4, n)
+    v = rng.integers(0, 4, n)
+    t = np.sort(rng.integers(0, 30, n))  # heavy timestamp ties
+    from repro.core import from_edges
+
+    g = from_edges(u, v, t)
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, 5, 5))
+    got = discover(g, delta=5, l_max=5, omega=2)
+    assert_counts_equal(expect, got.counts, "ties+selfloops")
+
+
+def test_transition_tree_consistency():
+    g = sg.triadic_stream(600, 25, seed=2)
+    res = discover(g, delta=120, l_max=4, omega=3)
+    tree = res.tree()
+    # root through == total processes; children sum <= parent's through
+    assert tree.root.through == res.total_processes()
+    for code, node in tree.root.children.items():
+        child_sum = sum(c.through for c in node.children.values())
+        assert node.evolved == child_sum
+        assert node.through >= node.stopped
+    # level histogram consistent with per-code lengths
+    hist = res.level_histogram()
+    assert sum(hist.values()) == res.total_processes()
+
+
+def test_empty_and_single_edge():
+    from repro.core import from_edges
+
+    g0 = from_edges(np.array([], int), np.array([], int), np.array([], int))
+    assert discover(g0, delta=5, l_max=3).counts == {}
+    g1 = from_edges(np.array([3]), np.array([8]), np.array([100]))
+    res = discover(g1, delta=5, l_max=3)
+    assert res.counts == {"01": 1}

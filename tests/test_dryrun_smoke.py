@@ -1,0 +1,69 @@
+"""Dry-run smoke: lower+compile representative cells on a small virtual mesh.
+
+The full 256/512-chip sweep runs via ``python -m repro.launch.dryrun
+--orchestrate`` (results under benchmarks/results/dryrun).  Here we prove the
+machinery end to end in-process-light subprocesses with 8 virtual devices —
+smoke configs, every workload kind, plus the sharding resolver paths
+(batch=1 long-context, MoE expert sharding, mining shard_map).
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+_TEMPLATE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get_arch
+from repro.configs.common import LMShape
+from repro.configs.gnn_common import GNNShape
+from repro.configs.dcn_v2 import RecsysShape
+from repro.configs.ptmt import MiningShape
+from repro.launch.mesh import make_test_mesh
+
+mesh = make_test_mesh((2, 2, 2), ("pod", "data", "model"))
+arch = get_arch({arch!r})
+shape = {shape}
+wl = arch.workload_fn(arch.smoke_config, shape, mesh)
+if wl.in_shardings is None:
+    jitted = jax.jit(wl.fn)
+else:
+    jitted = jax.jit(wl.fn, in_shardings=wl.in_shardings,
+                     out_shardings=wl.out_shardings)
+compiled = jitted.lower(*wl.in_sds).compile()
+ma = compiled.memory_analysis()
+assert ma.temp_size_in_bytes >= 0
+print("OK", wl.name, ma.temp_size_in_bytes)
+"""
+
+CASES = [
+    ("granite-8b", "LMShape('train_4k', 256, 16, 'train')"),
+    ("gemma3-1b", "LMShape('prefill_32k', 2048, 4, 'prefill')"),
+    ("qwen2-72b", "LMShape('decode_32k', 2048, 8, 'decode')"),
+    ("moonshot-v1-16b-a3b", "LMShape('train_4k', 128, 8, 'train')"),
+    ("arctic-480b", "LMShape('long_500k', 16384, 1, 'decode')"),
+    ("gat-cora", "GNNShape('full_graph_sm', 512, 2048, 16, 4)"),
+    ("equiformer-v2", "GNNShape('molecule', 240, 512, 8, 1, n_graphs=8)"),
+    ("dcn-v2", "RecsysShape('train_batch', 1024, 'train')"),
+    ("dcn-v2", "RecsysShape('retrieval_cand', 1, 'retrieval', "
+               "n_candidates=4096)"),
+    ("ptmt-mining", "MiningShape('mine_sm', 64, 256)"),
+]
+
+
+@pytest.mark.parametrize("arch,shape", CASES,
+                         ids=[f"{a}-{i}" for i, (a, s) in enumerate(CASES)])
+def test_cell_lowers_and_compiles(arch, shape):
+    code = _TEMPLATE.format(arch=arch, shape=shape)
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=540, env=env, cwd=REPO,
+    )
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

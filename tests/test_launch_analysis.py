@@ -1,0 +1,69 @@
+"""Unit tests for roofline extraction (HLO collective parsing, terms)."""
+
+import numpy as np
+
+from repro.launch import analysis
+
+
+def test_shape_bytes():
+    assert analysis._shape_bytes("bf16[128,256]{1,0}") == 128 * 256 * 2
+    assert analysis._shape_bytes("f32[8]{0}") == 32
+    assert analysis._shape_bytes("pred[16]") == 16
+    # tuples: sum of members
+    assert analysis._shape_bytes("(f32[4]{0}, s32[4]{0})") == 32
+
+
+def test_collective_bytes_parsing():
+    hlo = """
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512]{1,0} %x), dims={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%sum
+  %rs = f32[128,64]{1,0} reduce-scatter(f32[1024,64]{1,0} %z), dims={0}
+  %cp = u8[256]{0} collective-permute(u8[256]{0} %w)
+  %a2a = s32[64,32]{1,0} all-to-all(s32[64,32]{1,0} %v), dims={0}
+"""
+    out = analysis.collective_bytes(hlo)
+    k = out["per_kind_bytes"]
+    assert k["all-gather"] == 2048 * 512 * 2
+    assert k["all-reduce"] == 2 * 1024 * 4            # ring: 2x
+    assert k["reduce-scatter"] == 1024 * 64 * 4       # input-sized
+    assert k["collective-permute"] == 256
+    assert k["all-to-all"] == 64 * 32 * 4
+    assert out["per_kind_counts"]["all-gather"] == 1
+    assert out["total_bytes"] == sum(k.values())
+
+
+def test_collective_bytes_ignores_non_collectives():
+    hlo = "%d = f32[128,128]{1,0} dot(f32[128,128] %a, f32[128,128] %b)"
+    assert analysis.collective_bytes(hlo)["total_bytes"] == 0
+
+
+def test_roofline_terms_and_dominance():
+    rec = {
+        "flops_per_chip": 1.97e12,        # 10 ms of compute
+        "bytes_per_chip": 819e6,          # 1 ms of HBM
+        "collective_bytes_per_chip": 50e9 * 0.05,  # 50 ms of ICI
+        "n_chips": 256,
+        "model_flops": 1.97e12 * 256 * 0.5,
+    }
+    out = analysis.roofline(rec)
+    np.testing.assert_allclose(out["compute_s"], 0.01)
+    np.testing.assert_allclose(out["memory_s"], 1e-3)
+    np.testing.assert_allclose(out["collective_s"], 0.05)
+    assert out["dominant"] == "collective"
+    np.testing.assert_allclose(out["useful_flops_ratio"], 0.5)
+    # fraction: useful flops / (chips * peak * bound)
+    np.testing.assert_allclose(out["roofline_fraction"], 0.1)
+
+
+def test_roofline_peak_override():
+    rec = {
+        "flops_per_chip": 3.85e12,
+        "bytes_per_chip": 0.0,
+        "collective_bytes_per_chip": 0.0,
+        "n_chips": 1,
+        "model_flops": 3.85e12,
+        "peak_flops": analysis.VPU_PEAK,
+    }
+    out = analysis.roofline(rec)
+    np.testing.assert_allclose(out["compute_s"], 1.0)
+    np.testing.assert_allclose(out["roofline_fraction"], 1.0)

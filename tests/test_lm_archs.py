@@ -1,0 +1,120 @@
+"""Per-arch smoke tests: reduced configs, one forward/train/serve step on CPU.
+
+Full-size configs are exercised only via the dry-run (ShapeDtypeStruct, no
+allocation) — see launch/dryrun.py and tests/test_dryrun_smoke.py.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_arch, lm_arch_names
+from repro.configs.common import lm_active_params
+from repro.models import transformer
+from repro.training import optimizer
+
+
+@pytest.fixture(params=lm_arch_names())
+def arch(request):
+    return get_arch(request.param)
+
+
+def _batch(cfg, b=2, s=32, seed=0):
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    return {"tokens": tokens, "targets": jnp.roll(tokens, -1, 1)}
+
+
+def test_forward_shapes_and_finite(arch):
+    cfg = arch.smoke_config
+    p = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg)
+    logits, aux = transformer.forward(p, batch["tokens"], cfg)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    loss = transformer.loss_fn(p, batch, cfg)
+    assert bool(jnp.isfinite(loss))
+    # untrained loss should be near ln(vocab)
+    assert float(loss) < np.log(cfg.vocab) + 3.0
+
+
+def test_train_step_updates_and_finite(arch):
+    cfg = arch.smoke_config
+    p = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    o = optimizer.init_state(p)
+    opt_cfg = optimizer.AdamWConfig(warmup_steps=1)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, g = jax.value_and_grad(transformer.loss_fn)(p, b, cfg, None)
+        p2, o2, m = optimizer.apply_updates(opt_cfg, p, g, o)
+        m["loss"] = loss
+        return p2, o2, m
+
+    p2, o2, m = step(p, o, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    assert bool(jnp.isfinite(m["grad_norm"]))
+    # params actually changed
+    diff = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p, p2
+    )
+    assert max(jax.tree.leaves(diff)) > 0
+
+
+def test_serve_step_decodes(arch):
+    cfg = arch.smoke_config
+    p = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    cache = transformer.init_cache(cfg, 2, 64)
+    tok = jnp.zeros((2, 1), jnp.int32)
+    step = jax.jit(
+        lambda p, c, t, i: transformer.serve_step(p, c, t, i, cfg, None)
+    )
+    logits, cache = step(p, cache, tok, jnp.asarray(0, jnp.int32))
+    assert logits.shape == (2, cfg.vocab)
+    assert bool(jnp.isfinite(logits).all())
+    # cache got written at position 0
+    assert float(jnp.abs(cache["k"][:, :, 0]).sum()) > 0
+    logits2, cache = step(p, cache, tok, jnp.asarray(1, jnp.int32))
+    assert bool(jnp.isfinite(logits2).all())
+
+
+def test_decode_matches_prefill(arch):
+    """Greedy decode logits must match teacher-forced forward logits."""
+    cfg = arch.smoke_config
+    p = transformer.init_params(jax.random.PRNGKey(2), cfg)
+    b, s = 2, 8
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab)
+    full_logits, _ = transformer.forward(p, tokens, cfg)
+
+    cache = transformer.init_cache(cfg, b, 16)
+    step = jax.jit(
+        lambda p, c, t, i: transformer.serve_step(p, c, t, i, cfg, None)
+    )
+    for i in range(s):
+        logits, cache = step(
+            p, cache, tokens[:, i: i + 1], jnp.asarray(i, jnp.int32)
+        )
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(full_logits[:, -1]),
+        rtol=2e-4, atol=2e-4,
+    )
+
+
+def test_full_config_param_counts():
+    """Full configs must land on their nameplate sizes."""
+    expected = {
+        "granite-8b": (8.05e9, 0.1),
+        "gemma3-1b": (1.0e9, 0.15),
+        "qwen2-72b": (72.7e9, 0.1),
+        "moonshot-v1-16b-a3b": (28.9e9, 0.2),   # assigned 48L variant
+        "arctic-480b": (477e9, 0.1),
+    }
+    for name, (target, tol) in expected.items():
+        n = get_arch(name).config.n_params()
+        assert abs(n - target) / target < tol, (name, n)
+    # MoE active params far below total
+    moon = get_arch("moonshot-v1-16b-a3b").config
+    assert lm_active_params(moon) < 0.25 * moon.n_params()
