@@ -19,6 +19,7 @@ from . import (
     bench_runtime,
     bench_scalability,
     bench_sensitivity,
+    bench_streaming,
     bench_tzp,
 )
 
@@ -31,6 +32,7 @@ SUITES = {
     "table6_case_study": bench_case_study,
     "perf_mining": bench_perf_mining,
     "roofline": bench_roofline,
+    "streaming": bench_streaming,
 }
 
 

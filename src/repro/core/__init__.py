@@ -1,19 +1,37 @@
 # The paper's primary contribution: PTMT — parallel motif-transition-process
 # discovery with Temporal Zone Partitioning, adapted TPU-native (see DESIGN.md).
-from . import aggregation, encoding, expansion, oracle, transitions, tzp
+from . import (
+    aggregation,
+    backends,
+    encoding,
+    expansion,
+    oracle,
+    transitions,
+    tzp,
+)
 from .api import DiscoveryResult, discover, discover_sequential
+from .backends import available_backends, get_backend, register_backend
+from .executor import MiningExecutor, ZoneChunkError
+from .streaming import StreamingMiner
 from .temporal_graph import TemporalGraph, from_edges
 
 __all__ = [
     "DiscoveryResult",
+    "MiningExecutor",
+    "StreamingMiner",
     "TemporalGraph",
+    "ZoneChunkError",
     "aggregation",
+    "available_backends",
+    "backends",
     "discover",
     "discover_sequential",
     "encoding",
     "expansion",
     "from_edges",
+    "get_backend",
     "oracle",
+    "register_backend",
     "transitions",
     "tzp",
 ]

@@ -7,19 +7,23 @@
 
 Both return a :class:`DiscoveryResult` whose counts are *exact* (validated
 against the brute-force oracle and each other in tests — the paper's Fig. 7).
+
+The actual scan+aggregate work happens in :class:`repro.core.executor.
+MiningExecutor`; this module only plans zones, builds the padded batch, and
+renders the result.  Backends are resolved through
+:mod:`repro.core.backends`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 
 import numpy as np
 
 import jax
-import jax.numpy as jnp
 
-from . import aggregation, expansion, transitions, tzp
+from . import transitions, tzp
+from .executor import MiningExecutor
 from .temporal_graph import TemporalGraph
 
 
@@ -42,41 +46,14 @@ class DiscoveryResult:
         return transitions.level_histogram(self.counts)
 
 
-def _backend_scan(backend: str):
-    if backend == "ref":
-        return expansion.scan_zones
-    if backend == "pallas":
-        from repro.kernels.zone_scan import ops as zone_ops
-
-        return zone_ops.scan_zones
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-@functools.partial(
-    jax.jit, static_argnames=("delta", "l_max", "backend", "zone_chunk")
-)
-def _mine_batch(u, v, t, valid, signs, *, delta, l_max, backend, zone_chunk):
-    """Jitted zone sweep + signed aggregation over a padded zone batch."""
-    scan = _backend_scan(backend)
-
-    def chunk_fn(args):
-        cu, cv, ct, cvalid = args
-        res = scan(cu, cv, ct, cvalid, delta=delta, l_max=l_max)
-        return res.code, res.length
-
-    z = u.shape[0]
-    if zone_chunk and zone_chunk < z:
-        # bound peak memory: process zones in chunks of `zone_chunk`
-        nchunk = z // zone_chunk
-        reshape = lambda x: x.reshape(nchunk, zone_chunk, *x.shape[1:])
-        codes, lengths = jax.lax.map(
-            chunk_fn, (reshape(u), reshape(v), reshape(t), reshape(valid))
-        )
-        codes = codes.reshape(z, *codes.shape[2:])
-        lengths = lengths.reshape(z, *lengths.shape[2:])
-    else:
-        codes, lengths = chunk_fn((u, v, t, valid))
-    return aggregation.aggregate_zones(codes, lengths, signs)
+def counts_to_result(counts, *, n_zones, e_cap, overflow, delta,
+                     l_max) -> DiscoveryResult:
+    """Render a device :class:`CodeCounts` into a :class:`DiscoveryResult`."""
+    count_dict = transitions.device_counts_to_dict(counts)
+    return DiscoveryResult(
+        counts=count_dict, n_zones=n_zones, e_cap=e_cap, overflow=overflow,
+        delta=delta, l_max=l_max,
+    )
 
 
 def discover(
@@ -98,18 +75,22 @@ def discover(
       delta, l_max, omega: paper parameters (Definitions 2-5).
       e_cap: per-zone edge capacity; zones denser than this are adaptively
         shrunk by the planner (never below the correctness floor ``2*L_b``).
-      backend: "ref" (pure jnp lax.scan) or "pallas" (TPU kernel).
+      backend: any registered zone-scan backend ("ref", "pallas", "numpy");
+        see :func:`repro.core.backends.available_backends`.
       zone_chunk: process zones in chunks of this many to bound memory.
       mesh/zone_axes: optional mesh to shard the zone axis over (data
         parallelism across devices — the paper's thread pool).
     """
+    executor = MiningExecutor(
+        delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk
+    )
     plan = tzp.plan_zones(graph, delta=delta, l_max=l_max, omega=omega,
                           e_cap=e_cap)
     n_shards = 1
     if mesh is not None:
         axes = zone_axes or tuple(mesh.axis_names)
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    pad_zones = (zone_chunk or 1) * n_shards
+    pad_zones = (executor.zone_chunk or 1) * n_shards
     batch = tzp.build_zone_batch(
         graph, plan, e_cap=e_cap, pad_zones_to=pad_zones, n_shards=n_shards
     )
@@ -118,23 +99,13 @@ def discover(
         from repro.distributed import mining as dist_mining
 
         counts = dist_mining.mine_on_mesh(
-            batch, mesh, axes, delta=delta, l_max=l_max, backend=backend,
-            zone_chunk=zone_chunk,
+            batch, mesh, axes, executor=executor,
         )
     else:
-        counts = _mine_batch(
-            jnp.asarray(batch.u), jnp.asarray(batch.v), jnp.asarray(batch.t),
-            jnp.asarray(batch.valid), jnp.asarray(batch.sign),
-            delta=delta, l_max=l_max, backend=backend,
-            zone_chunk=zone_chunk or 0,
-        )
+        counts = executor.run(batch)
 
-    count_dict = transitions.counts_to_dict(
-        np.asarray(counts.codes), np.asarray(counts.counts),
-        np.asarray(counts.unique_mask),
-    )
-    return DiscoveryResult(
-        counts=count_dict, n_zones=plan.n_zones, e_cap=batch.e_cap,
+    return counts_to_result(
+        counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
         overflow=batch.overflow, delta=delta, l_max=l_max,
     )
 
@@ -144,21 +115,14 @@ def discover_sequential(
 ) -> DiscoveryResult:
     """TMC-analog baseline: one zone spanning the whole stream (no TZP)."""
     n = max(graph.n_edges, 8)
-    u = jnp.zeros((1, n), jnp.int32).at[0, : graph.n_edges].set(graph.u)
-    v = jnp.zeros((1, n), jnp.int32).at[0, : graph.n_edges].set(graph.v)
-    t = jnp.zeros((1, n), jnp.int32).at[0, : graph.n_edges].set(graph.t)
-    valid = (
-        jnp.zeros((1, n), bool).at[0, : graph.n_edges].set(True)
-    )
-    counts = _mine_batch(
-        u, v, t, valid, jnp.ones(1, jnp.int32),
-        delta=delta, l_max=l_max, backend=backend, zone_chunk=0,
-    )
-    count_dict = transitions.counts_to_dict(
-        np.asarray(counts.codes), np.asarray(counts.counts),
-        np.asarray(counts.unique_mask),
-    )
-    return DiscoveryResult(
-        counts=count_dict, n_zones=1, e_cap=n, overflow=0,
-        delta=delta, l_max=l_max,
+    u = np.zeros((1, n), np.int32)
+    v = np.zeros((1, n), np.int32)
+    t = np.zeros((1, n), np.int32)
+    valid = np.zeros((1, n), bool)
+    tzp.fill_zone_row(u[0], v[0], t[0], valid[0], graph.u, graph.v, graph.t)
+    executor = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                              zone_chunk=0)
+    counts = executor.run_arrays(u, v, t, valid, np.ones(1, np.int32))
+    return counts_to_result(
+        counts, n_zones=1, e_cap=n, overflow=0, delta=delta, l_max=l_max,
     )

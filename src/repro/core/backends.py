@@ -1,0 +1,160 @@
+"""Pluggable zone-scan backend registry (the executor's dispatch layer).
+
+Every Phase-1 implementation (growth-zone candidate expansion) is published
+here as a :class:`BackendSpec` carrying the scan callable plus capability
+metadata the executor needs to drive it correctly:
+
+* ``jittable``  — whether the scan is JAX-traceable (can live inside
+  ``jax.jit`` / ``shard_map``).  The pure-NumPy oracle backend is host-side
+  and runs outside the jit boundary.
+* ``grade``     — "reference" (vectorized jnp, exact), "accelerator"
+  (Pallas TPU kernel, exact, fast), or "oracle" (brute-force host walk,
+  the ground-truth semantics tests cross-check against).
+* ``block_defaults`` — kernel tile sizes (e.g. Pallas ``c_blk``/``e_blk``)
+  owned by the backend, not by call sites.
+* ``default_zone_chunk`` / ``max_recommended_e_cap`` — scheduling hints.
+
+Backends self-describe; the executor, the distributed mining step, and the
+CLI all resolve scans through :func:`get_backend` instead of hand-rolled
+``if backend == ...`` chains.  Registration is lazy: the loader imports the
+implementation on first use, so importing this module never pulls in Pallas.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+__all__ = [
+    "BackendSpec",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+]
+
+
+@dataclasses.dataclass
+class BackendSpec:
+    """One registered zone-scan implementation plus its capabilities.
+
+    ``scan`` has the reference signature
+    ``scan(u, v, t, valid, *, delta, l_max) -> ZoneResult`` over a
+    ``[Z, E]`` zone batch (arrays are jnp for jittable backends, numpy
+    for host backends).
+    """
+
+    name: str
+    loader: Callable[[], Callable]
+    jittable: bool = True
+    grade: str = "reference"
+    description: str = ""
+    block_defaults: dict | None = None
+    default_zone_chunk: int | None = None
+    max_recommended_e_cap: int | None = None
+    _scan: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def scan(self) -> Callable:
+        """Resolve (and cache) the scan callable."""
+        if self._scan is None:
+            self._scan = self.loader()
+        return self._scan
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_backend(
+    name: str,
+    loader: Callable[[], Callable],
+    *,
+    jittable: bool = True,
+    grade: str = "reference",
+    description: str = "",
+    block_defaults: dict | None = None,
+    default_zone_chunk: int | None = None,
+    max_recommended_e_cap: int | None = None,
+    overwrite: bool = False,
+) -> BackendSpec:
+    """Publish a zone-scan backend under ``name``.
+
+    ``loader`` is a zero-arg callable returning the scan function; it runs
+    at most once, on first :func:`get_backend` resolution.
+    """
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {name!r} already registered "
+                         f"(pass overwrite=True to replace)")
+    spec = BackendSpec(
+        name=name, loader=loader, jittable=jittable, grade=grade,
+        description=description, block_defaults=block_defaults,
+        default_zone_chunk=default_zone_chunk,
+        max_recommended_e_cap=max_recommended_e_cap,
+    )
+    _REGISTRY[name] = spec
+    return spec
+
+
+def get_backend(name: str) -> BackendSpec:
+    """Look up a backend; error lists what is available."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {available_backends()}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in backends.
+# ---------------------------------------------------------------------------
+
+
+def _load_ref():
+    from repro.core import expansion
+
+    return expansion.scan_zones
+
+
+# Pallas zone-scan tile sizes (candidates x edges per VMEM block).  Defined
+# here — importable without pulling in Pallas — and consumed by
+# kernels/zone_scan/ops.py as its call defaults, so registry metadata and
+# kernel defaults cannot drift.
+PALLAS_BLOCK_DEFAULTS = {"c_blk": 512, "e_blk": 256}
+
+
+def _load_pallas():
+    from repro.kernels.zone_scan import ops as zone_ops
+
+    return zone_ops.scan_zones
+
+
+def _load_numpy():
+    from repro.core import scan_numpy
+
+    return scan_numpy.scan_zones
+
+
+register_backend(
+    "ref", _load_ref,
+    jittable=True, grade="reference",
+    description="vectorized jnp lax.scan expansion (exact, any device)",
+)
+
+register_backend(
+    "pallas", _load_pallas,
+    jittable=True, grade="accelerator",
+    description="Pallas TPU kernel with live-window block skipping",
+    block_defaults=PALLAS_BLOCK_DEFAULTS,
+)
+
+register_backend(
+    "numpy", _load_numpy,
+    jittable=False, grade="oracle",
+    description="pure-NumPy brute-force walk (ground truth, small inputs)",
+    max_recommended_e_cap=4096,
+)

@@ -1,0 +1,184 @@
+"""Unified mining executor — ONE chunked scan+aggregate engine.
+
+Every discovery entry point (batch ``discover``, the sequential baseline,
+``distributed.mining.mine_on_mesh`` and the streaming miner) routes through
+:class:`MiningExecutor` instead of carrying its own copy of the zone sweep:
+
+* backend dispatch goes through :mod:`repro.core.backends` (capability-aware,
+  pluggable);
+* zone chunking (``lax.map`` over zone sub-batches to bound peak memory) is
+  implemented once, with an explicit policy for zone counts that do not
+  divide ``zone_chunk`` — **pad** (default: append inert zero-sign rows) or
+  **raise** — never the silent remainder drop the pre-refactor
+  ``_mine_batch`` had;
+* jit compilation is cached per ``(backend, delta, l_max, zone_chunk, batch
+  shape)`` via a single module-level jitted function, shared by every
+  executor instance;
+* host-only backends (``jittable=False``, e.g. the NumPy oracle) run their
+  scan outside the jit boundary and only the signed aggregation is jitted.
+
+``scan_aggregate`` is the traceable core (usable inside ``shard_map``);
+``run`` is the host-level entry that applies batching policy first.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from . import aggregation, backends
+from .aggregation import CodeCounts
+from .tzp import ZoneBatch
+
+
+class ZoneChunkError(ValueError):
+    """Zone count does not divide ``zone_chunk`` under pad_policy='raise'."""
+
+
+def _chunked_scan(scan, u, v, t, valid, *, delta, l_max, zone_chunk):
+    """Sweep a [Z, E] zone batch, optionally in chunks of ``zone_chunk``.
+
+    Traceable; shapes are static here, so divisibility is checked at trace
+    time (the executor's host path pads beforehand under pad_policy='pad').
+    """
+
+    def chunk_fn(args):
+        cu, cv, ct, cvalid = args
+        res = scan(cu, cv, ct, cvalid, delta=delta, l_max=l_max)
+        return res.code, res.length
+
+    z = u.shape[0]
+    if zone_chunk and zone_chunk < z:
+        if z % zone_chunk != 0:
+            raise ZoneChunkError(
+                f"zone count {z} is not divisible by zone_chunk "
+                f"{zone_chunk}; pad the batch (pad_policy='pad') or pick a "
+                f"divisor — remainder zones would otherwise be dropped"
+            )
+        nchunk = z // zone_chunk
+        reshape = lambda x: x.reshape(nchunk, zone_chunk, *x.shape[1:])
+        codes, lengths = jax.lax.map(
+            chunk_fn, (reshape(u), reshape(v), reshape(t), reshape(valid))
+        )
+        codes = codes.reshape(z, *codes.shape[2:])
+        lengths = lengths.reshape(z, *lengths.shape[2:])
+    else:
+        codes, lengths = chunk_fn((u, v, t, valid))
+    return codes, lengths
+
+
+@functools.partial(
+    jax.jit, static_argnames=("delta", "l_max", "scan", "zone_chunk")
+)
+def _mine_jit(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk):
+    """Jitted zone sweep + signed aggregation (shared compile cache).
+
+    jax.jit keys its cache on the static args plus input shapes, so every
+    executor instance with the same (scan fn, delta, l_max, zone_chunk,
+    batch shape) reuses one executable.  The cache is keyed on the resolved
+    scan *callable*, not the backend name, so re-registering a backend
+    (``overwrite=True``) cannot serve a stale executable.
+    """
+    codes, lengths = _chunked_scan(
+        scan, u, v, t, valid, delta=delta, l_max=l_max, zone_chunk=zone_chunk
+    )
+    return aggregation.aggregate_zones(codes, lengths, signs)
+
+
+class MiningExecutor:
+    """Chunked scan+aggregate engine over padded zone batches.
+
+    Args:
+      delta, l_max: paper parameters (Definitions 2-5).
+      backend: registry name ("ref", "pallas", "numpy", or plugin).
+      zone_chunk: process zones in chunks of this many to bound peak memory
+        (None/0 = whole batch at once); defaults to the backend's hint.
+      pad_policy: "pad" appends inert zero-sign zone rows when the zone
+        count does not divide ``zone_chunk``; "raise" errors instead.
+    """
+
+    def __init__(
+        self,
+        *,
+        delta: int,
+        l_max: int,
+        backend: str = "ref",
+        zone_chunk: int | None = None,
+        pad_policy: str = "pad",
+    ):
+        if pad_policy not in ("pad", "raise"):
+            raise ValueError(f"unknown pad_policy {pad_policy!r}")
+        self.delta = int(delta)
+        self.l_max = int(l_max)
+        self.spec = backends.get_backend(backend)
+        if zone_chunk is None:
+            zone_chunk = self.spec.default_zone_chunk
+        self.zone_chunk = int(zone_chunk or 0)
+        self.pad_policy = pad_policy
+
+    @property
+    def backend(self) -> str:
+        return self.spec.name
+
+    # -- traceable core (used inside shard_map by distributed mining) -------
+
+    def scan_aggregate(self, u, v, t, valid, signs) -> CodeCounts:
+        """Scan + signed-aggregate a [Z, E] batch; JAX-traceable.
+
+        Raises :class:`ZoneChunkError` at trace time when the (static) zone
+        count does not divide ``zone_chunk`` — inside a trace there is no
+        host to pad, so the remainder cannot be silently handled.
+        """
+        if not self.spec.jittable:
+            raise ValueError(
+                f"backend {self.backend!r} is host-only (jittable=False) "
+                f"and cannot run inside a traced/sharded computation"
+            )
+        codes, lengths = _chunked_scan(
+            self.spec.scan, u, v, t, valid,
+            delta=self.delta, l_max=self.l_max, zone_chunk=self.zone_chunk,
+        )
+        return aggregation.aggregate_zones(codes, lengths, signs)
+
+    # -- host-level entry points -------------------------------------------
+
+    def run(self, batch: ZoneBatch) -> CodeCounts:
+        """Mine a host-built :class:`ZoneBatch` to signed code counts."""
+        return self.run_arrays(batch.u, batch.v, batch.t, batch.valid,
+                               batch.sign)
+
+    def run_arrays(self, u, v, t, valid, signs) -> CodeCounts:
+        """Mine raw [Z, E] zone arrays (+ [Z] signs) to signed code counts."""
+        u, v, t, valid, signs = (np.asarray(x)
+                                 for x in (u, v, t, valid, signs))
+        z = u.shape[0]
+        zc = self.zone_chunk
+        if zc and zc < z and z % zc != 0:
+            if self.pad_policy == "raise":
+                raise ZoneChunkError(
+                    f"zone count {z} is not divisible by zone_chunk {zc} "
+                    f"(pad_policy='raise')"
+                )
+            pad = zc - z % zc
+            pad_rows = lambda x: np.concatenate(
+                [x, np.zeros((pad, *x.shape[1:]), x.dtype)])
+            u, v, t, valid = map(pad_rows, (u, v, t, valid))
+            signs = np.concatenate([signs, np.zeros(pad, signs.dtype)])
+
+        if not self.spec.jittable:
+            res = self.spec.scan(u, v, t, valid,
+                                 delta=self.delta, l_max=self.l_max)
+            return aggregation.aggregate_zones(
+                jnp.asarray(res.code), jnp.asarray(res.length),
+                jnp.asarray(signs),
+            )
+        return _mine_jit(
+            jnp.asarray(u), jnp.asarray(v), jnp.asarray(t),
+            jnp.asarray(valid), jnp.asarray(signs),
+            delta=self.delta, l_max=self.l_max, scan=self.spec.scan,
+            zone_chunk=self.zone_chunk,
+        )

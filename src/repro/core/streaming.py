@@ -1,0 +1,277 @@
+"""Incremental streaming discovery on top of the unified executor.
+
+Real temporal-graph workloads arrive as unbounded, time-ordered streams.
+TZP's signed growth/boundary decomposition (Lemma 4.2) is naturally
+incremental: counts are a signed sum over zones, and the identity holds for
+*any* partition whose consecutive zones overlap by exactly ``L_b = delta *
+l_max`` and are each at least ``2 * L_b`` long.  A growth/boundary zone pair
+``(G_i = [s_i, e_i), B_i = [e_i - L_b, e_i))`` is **final** once the stream
+head has moved past ``e_i + L_b``: no future edge can extend any process
+seeded before ``e_i`` (the per-step gap bound is ``delta <= L_b``), so the
+pair can be mined immediately and merged into the running totals, and every
+edge older than ``s_{i+1} = e_i - L_b`` can be discarded.
+
+:class:`StreamingMiner` therefore keeps only a sliding buffer of
+not-yet-finalized edges.  ``snapshot()`` mines the still-open tail of the
+**closed prefix** (edges with ``t < t_head - L_b``) as a fresh mini zone
+plan and merges it with the finalized totals — by Lemma 4.2 the result
+equals batch ``discover()`` run on that prefix, exactly, per code (tested in
+``tests/test_streaming.py``), whenever batch discovery itself is exact
+(``overflow == 0``).  The streaming miner never drops edges: with a small
+``e_cap`` on bursty data, batch ``discover`` may overflow zone capacity and
+undercount, while snapshots stay oracle-exact — cross-checks against a
+batch run must first confirm its ``overflow`` is zero.  Finalized-pair
+contributions never change as
+more data arrives; like batch discovery on a truncated stream, processes
+seeded within ``L_b`` of the prefix end are reported as currently observed
+and may still grow in later snapshots.
+
+All mining goes through :class:`repro.core.executor.MiningExecutor` — the
+streaming layer owns frontier bookkeeping only.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from . import transitions, tzp
+from .api import DiscoveryResult
+from .executor import MiningExecutor
+from .temporal_graph import TemporalGraph
+
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(x - 1, 1).bit_length()
+
+
+def _merge_into(total: dict[str, int], part: dict[str, int]) -> None:
+    for code, cnt in part.items():
+        new = total.get(code, 0) + cnt
+        if new:
+            total[code] = new
+        else:
+            total.pop(code, None)
+
+
+def replay_stream(miner: "StreamingMiner", graph, chunk_edges: int):
+    """Feed ``graph`` through ``miner`` in chunks; measure ingest latency.
+
+    Shared by the CLI ``--stream`` mode and ``benchmarks/bench_streaming``
+    so both report the same metric.  Returns ``(latencies, total_seconds)``
+    with one latency per ingested chunk.
+    """
+    import time
+
+    if chunk_edges < 1:
+        raise ValueError("chunk_edges must be >= 1")
+    latencies = []
+    t_start = time.perf_counter()
+    for i in range(0, graph.n_edges, chunk_edges):
+        t0 = time.perf_counter()
+        miner.ingest(graph.u[i:i + chunk_edges], graph.v[i:i + chunk_edges],
+                     graph.t[i:i + chunk_edges])
+        latencies.append(time.perf_counter() - t0)
+    return latencies, time.perf_counter() - t_start
+
+
+class StreamingMiner:
+    """Ingests time-ordered edge chunks; maintains running exact counts.
+
+    Args:
+      delta, l_max, omega, e_cap: paper parameters, as in ``discover``.
+      backend: registered zone-scan backend name.
+      zone_chunk: executor memory bound (chunked zone sweep).
+
+    Usage::
+
+        miner = StreamingMiner(delta=600, l_max=6)
+        for u, v, t in chunks:           # t non-decreasing across chunks
+            miner.ingest(u, v, t)
+        result = miner.snapshot()        # exact counts on the closed prefix
+        final = miner.snapshot(final=True)   # treat the stream as ended
+    """
+
+    def __init__(
+        self,
+        *,
+        delta: int,
+        l_max: int,
+        omega: int = 20,
+        e_cap: int | None = None,
+        backend: str = "ref",
+        zone_chunk: int | None = None,
+    ):
+        if delta < 1 or l_max < 1:
+            raise ValueError("delta and l_max must be >= 1")
+        if omega < 2:
+            raise ValueError("omega must be >= 2")
+        self.delta = int(delta)
+        self.l_max = int(l_max)
+        self.omega = int(omega)
+        self.e_cap = e_cap
+        self.l_b = self.delta * self.l_max
+        self.l_g = self.omega * self.l_b
+        self.executor = MiningExecutor(
+            delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk
+        )
+
+        self._u = np.zeros(0, np.int32)     # sliding buffer: edges >= s
+        self._v = np.zeros(0, np.int32)
+        self._t = np.zeros(0, np.int64)
+        self._s: int | None = None          # next zone start time
+        self._t_head: int | None = None     # newest ingested timestamp
+        self._counts: dict[str, int] = {}   # merged finalized-pair counts
+        self.n_edges_ingested = 0
+        self.n_edges_retired = 0            # dropped from the buffer
+        self.n_zones_finalized = 0
+
+    # -- stream state -------------------------------------------------------
+
+    @property
+    def t_head(self) -> int | None:
+        return self._t_head
+
+    @property
+    def closed_time(self) -> int | None:
+        """Exclusive upper bound of the closed (final) prefix."""
+        if self._t_head is None:
+            return None
+        return int(self._t_head) - self.l_b
+
+    @property
+    def buffered_edges(self) -> int:
+        return int(self._t.shape[0])
+
+    # -- ingestion ----------------------------------------------------------
+
+    def ingest(self, u, v, t) -> None:
+        """Append one time-ordered edge chunk and advance the frontier."""
+        u = np.asarray(u, np.int32).ravel()
+        v = np.asarray(v, np.int32).ravel()
+        t = np.asarray(t, np.int64).ravel()
+        if not (u.shape == v.shape == t.shape):
+            raise ValueError("u, v, t must have identical shapes")
+        if t.size == 0:
+            return
+        if np.any(np.diff(t) < 0):
+            raise ValueError("chunk timestamps must be non-decreasing")
+        if self._t_head is not None and int(t[0]) < self._t_head:
+            raise ValueError(
+                f"chunk starts at t={int(t[0])} before the stream head "
+                f"{self._t_head}; edges must arrive time-ordered"
+            )
+        self._u = np.concatenate([self._u, u])
+        self._v = np.concatenate([self._v, v])
+        self._t = np.concatenate([self._t, t])
+        self._t_head = int(t[-1])
+        if self._s is None:
+            self._s = int(self._t[0])
+        self.n_edges_ingested += int(t.size)
+        self._advance()
+
+    def _advance(self) -> None:
+        """Finalize every growth/boundary pair fully behind the frontier."""
+        while True:
+            if self._t.size == 0:
+                return
+            limit = self._t_head - self.l_b
+            # quiet-gap skip: no edges exist in [s, t0), so jumping the zone
+            # start to the next buffered edge leaves the signed cover exact
+            # (empty zones contribute nothing) and keeps ingest O(zones with
+            # edges) instead of one iteration per empty l_g-window.
+            t0 = int(self._t[0])
+            if t0 > self._s:
+                self._s = t0
+            s = self._s
+            e = s + self.l_g
+            if e > limit:
+                return
+            # adaptive shrink, same rule as the batch planner (all edges in
+            # [s, e) have arrived because e <= limit < t_head)
+            lo = int(np.searchsorted(self._t, s, side="left"))
+            e = tzp.adaptive_zone_end(self._t, s, e, e_cap=self.e_cap,
+                                      l_b=self.l_b)
+            self._finalize_pair(s, e, lo)
+            new_s = e - self.l_b
+            keep = int(np.searchsorted(self._t, new_s, side="left"))
+            self.n_edges_retired += keep
+            self._u = self._u[keep:]
+            self._v = self._v[keep:]
+            self._t = self._t[keep:]
+            self._s = new_s
+
+    def _finalize_pair(self, s: int, e: int, lo: int) -> None:
+        """Mine G = [s, e) with sign +1 and B = [e - l_b, e) with sign -1."""
+        hi = int(np.searchsorted(self._t, e, side="left"))
+        b_lo = int(np.searchsorted(self._t, e - self.l_b, side="left"))
+        g_cnt = hi - lo
+        b_cnt = hi - b_lo
+        if g_cnt == 0:
+            self.n_zones_finalized += 2
+            return
+        # pad per-zone capacity to a power of two so jit shapes stabilize
+        cap = _next_pow2(max(g_cnt, 8))
+        shape = (2, cap)
+        u = np.zeros(shape, np.int32)
+        v = np.zeros(shape, np.int32)
+        t = np.zeros(shape, np.int32)
+        valid = np.zeros(shape, bool)
+        # rebase timestamps to the pair start so the int32 device batch
+        # never overflows (counts are shift-invariant, only gaps matter)
+        t_base = self._t[lo]
+        for row, (zlo, cnt) in enumerate(((lo, g_cnt), (b_lo, b_cnt))):
+            tzp.fill_zone_row(
+                u[row], v[row], t[row], valid[row],
+                self._u[zlo:zlo + cnt], self._v[zlo:zlo + cnt],
+                self._t[zlo:zlo + cnt] - t_base,
+            )
+        signs = np.array([1, -1], np.int32)
+        counts = self.executor.run_arrays(u, v, t, valid, signs)
+        _merge_into(self._counts, transitions.device_counts_to_dict(counts))
+        self.n_zones_finalized += 2
+
+    # -- results ------------------------------------------------------------
+
+    def snapshot(self, *, final: bool = False) -> DiscoveryResult:
+        """Exact counts over the closed prefix (``t < t_head - L_b``).
+
+        With ``final=True`` the stream is treated as ended and every
+        buffered edge is mined (the result then equals batch ``discover``
+        over everything ingested).  ``snapshot`` never mutates state; it can
+        be called at any time, repeatedly.
+        """
+        counts = dict(self._counts)
+        n_zones = self.n_zones_finalized
+        tail_cap = 0
+        if self._t.size:
+            if final:
+                cut = int(self._t.size)
+            else:
+                cut = int(np.searchsorted(self._t, self.closed_time,
+                                          side="left"))
+            if cut > 0:
+                # rebase to the tail start: int32-safe, shift-invariant
+                tail = TemporalGraph(
+                    u=self._u[:cut], v=self._v[:cut],
+                    t=(self._t[:cut] - self._t[0]).astype(np.int32),
+                    n_nodes=int(max(self._u[:cut].max(initial=-1),
+                                    self._v[:cut].max(initial=-1)) + 1),
+                )
+                plan = tzp.plan_zones(
+                    tail, delta=self.delta, l_max=self.l_max,
+                    omega=self.omega, e_cap=self.e_cap,
+                )
+                batch = tzp.build_zone_batch(
+                    tail, plan,
+                    pad_zones_to=self.executor.zone_chunk or 1,
+                    pad_edges_to=64,
+                )
+                tail_counts = self.executor.run(batch)
+                _merge_into(
+                    counts, transitions.device_counts_to_dict(tail_counts))
+                n_zones += plan.n_zones
+                tail_cap = batch.e_cap
+        return DiscoveryResult(
+            counts=counts, n_zones=n_zones, e_cap=tail_cap, overflow=0,
+            delta=self.delta, l_max=self.l_max,
+        )

@@ -97,6 +97,14 @@ def counts_to_dict(codes: np.ndarray, counts: np.ndarray,
     return {k: v for k, v in out.items() if v != 0}
 
 
+def device_counts_to_dict(counts) -> dict[str, int]:
+    """:class:`~repro.core.aggregation.CodeCounts` -> {code string: count}."""
+    return counts_to_dict(
+        np.asarray(counts.codes), np.asarray(counts.counts),
+        np.asarray(counts.unique_mask),
+    )
+
+
 def build_tree(final_counts: dict[str, int]) -> TransitionTree:
     tree = TransitionTree()
     for code, count in final_counts.items():

@@ -48,6 +48,40 @@ class ZonePlan:
         return int(self.count.max()) if self.n_zones else 0
 
 
+def adaptive_zone_end(t: np.ndarray, s: int, e: int, *, e_cap: int | None,
+                      l_b: int) -> int:
+    """Adaptive shrink of a growth zone's end (beyond-paper, see module doc).
+
+    If more than ``e_cap`` edges fall in ``[s, e)``, shrink ``e`` to the
+    time of the ``(e_cap+1)``-th edge, floored at the correctness minimum
+    ``s + 2*l_b``.  Shared by the batch planner and the streaming frontier
+    so the zone geometry rule lives in exactly one place.
+    """
+    if e_cap is None:
+        return e
+    lo = int(np.searchsorted(t, s, side="left"))
+    hi_target = int(np.searchsorted(t, e, side="left"))
+    if hi_target - lo <= e_cap:
+        return e
+    e_shrunk = int(t[lo + e_cap])
+    return int(np.clip(e_shrunk, s + 2 * l_b, e))
+
+
+def fill_zone_row(u_row, v_row, t_row, valid_row, su, sv, st) -> None:
+    """Copy one zone's edges into a padded batch row (in place).
+
+    Padding timestamps repeat the zone max so kernel-level block skipping
+    stays conservative (padding edges are masked out by ``valid``).
+    """
+    cnt = len(su)
+    u_row[:cnt] = su
+    v_row[:cnt] = sv
+    t_row[:cnt] = st
+    if cnt:
+        t_row[cnt:] = st[-1]
+    valid_row[:cnt] = True
+
+
 def plan_zones(
     graph: TemporalGraph,
     *,
@@ -77,13 +111,8 @@ def plan_zones(
     while True:
         e = s + l_g
         lo = int(np.searchsorted(t, s, side="left"))
-        if e_cap is not None and e <= t_max:
-            hi_target = int(np.searchsorted(t, e, side="left"))
-            if hi_target - lo > e_cap:
-                # shrink to the time of the (e_cap+1)-th edge, floored at the
-                # correctness minimum 2*l_b.
-                e_shrunk = int(t[lo + e_cap])
-                e = int(np.clip(e_shrunk, s + 2 * l_b, s + l_g))
+        if e <= t_max:
+            e = adaptive_zone_end(t, s, e, e_cap=e_cap, l_b=l_b)
         hi = int(np.searchsorted(t, e, side="left"))
         lo_list.append(lo)
         cnt_list.append(hi - lo)
@@ -176,14 +205,9 @@ def build_zone_batch(
         cnt = int(plan.count[zi])
         take = min(cnt, cap)
         overflow += cnt - take
-        u[row, :take] = graph.u[lo:lo + take]
-        v[row, :take] = graph.v[lo:lo + take]
-        t[row, :take] = graph.t[lo:lo + take]
-        if take:
-            # pad timestamps with the zone max so kernel-level block skipping
-            # stays conservative (padding edges are masked out by `valid`)
-            t[row, take:] = graph.t[lo + take - 1]
-        valid[row, :take] = True
+        fill_zone_row(u[row], v[row], t[row], valid[row],
+                      graph.u[lo:lo + take], graph.v[lo:lo + take],
+                      graph.t[lo:lo + take])
         sign[row] = plan.sign[zi]
         perm[row] = zi
     return ZoneBatch(u=u, v=v, t=t, valid=valid, sign=sign, perm=perm,

@@ -1,6 +1,9 @@
 """Distributed PTMT: zones sharded over the mesh (the paper's thread pool).
 
-Phase-2 aggregation becomes a **two-level merge**:
+Per-device scan + signed aggregation is delegated to
+:class:`repro.core.executor.MiningExecutor` (``scan_aggregate`` is traceable
+and runs inside the ``shard_map`` body); this module owns only the
+collective merge.  Phase-2 aggregation becomes a **two-level merge**:
 
   1. every device signed-counts its own zones (`aggregate_zones`) — unique
      codes compact to the front of the local table;
@@ -15,49 +18,45 @@ merge with a deterministic, collective-friendly reduction.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import aggregation, expansion
+from repro.core import aggregation
 from repro.core.aggregation import CodeCounts
+from repro.core.executor import MiningExecutor
+
+from .collectives import shard_map_compat
 
 
-def _scan_chunked(u, v, t, valid, *, delta, l_max, backend, zone_chunk):
-    if backend == "pallas":
-        from repro.kernels.zone_scan import ops as zone_ops
-
-        scan = zone_ops.scan_zones
-    else:
-        scan = expansion.scan_zones
-
-    def chunk_fn(args):
-        cu, cv, ct, cvalid = args
-        res = scan(cu, cv, ct, cvalid, delta=delta, l_max=l_max)
-        return res.code, res.length
-
-    z = u.shape[0]
-    if zone_chunk and zone_chunk < z:
-        nchunk = z // zone_chunk
-        reshape = lambda x: x.reshape(nchunk, zone_chunk, *x.shape[1:])
-        codes, lengths = jax.lax.map(
-            chunk_fn, (reshape(u), reshape(v), reshape(t), reshape(valid))
+def _as_executor(
+    executor: MiningExecutor | None,
+    *,
+    delta: int | None,
+    l_max: int | None,
+    backend: str,
+    zone_chunk: int | None,
+) -> MiningExecutor:
+    if executor is None:
+        if delta is None or l_max is None:
+            raise ValueError("pass either an executor or delta+l_max")
+        executor = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                                  zone_chunk=zone_chunk)
+    if not executor.spec.jittable:
+        raise ValueError(
+            f"backend {executor.backend!r} is host-only and cannot be "
+            f"sharded over a mesh; use a jittable backend"
         )
-        codes = codes.reshape(z, *codes.shape[2:])
-        lengths = lengths.reshape(z, *lengths.shape[2:])
-    else:
-        codes, lengths = chunk_fn((u, v, t, valid))
-    return codes, lengths
+    return executor
 
 
 def make_mine_fn(
     mesh: jax.sharding.Mesh,
     axes: tuple[str, ...],
     *,
-    delta: int,
-    l_max: int,
+    executor: MiningExecutor | None = None,
+    delta: int | None = None,
+    l_max: int | None = None,
     backend: str = "ref",
     zone_chunk: int = 0,
     out_cap: int = 65536,
@@ -67,6 +66,8 @@ def make_mine_fn(
 
     Returns ``fn(u, v, t, valid, signs) -> (CodeCounts, overflow)`` where the
     zone axis (leading) is sharded over ``axes`` and the result is replicated.
+    Pass a configured :class:`MiningExecutor` or the legacy
+    delta/l_max/backend/zone_chunk kwargs (an executor is built internally).
 
     merge_mode:
       "flat"         — one all_gather over every axis, then a single merge
@@ -75,8 +76,11 @@ def make_mine_fn(
                        first).  Duplicate codes collapse at each stage, so
                        per-device traffic drops from O(n_devices * out_cap)
                        to O(sum(axis sizes) * out_cap) — the beyond-paper
-                       collective optimization measured in EXPERIMENTS §Perf.
+                       collective optimization measured in EXPERIMENTS.md
+                       §Perf.
     """
+    executor = _as_executor(executor, delta=delta, l_max=l_max,
+                            backend=backend, zone_chunk=zone_chunk)
     zone_spec = P(axes)
     scalar_spec = P(axes)
 
@@ -89,11 +93,7 @@ def make_mine_fn(
         return send_codes, send_counts, overflow
 
     def step(u, v, t, valid, signs):
-        codes, lengths = _scan_chunked(
-            u, v, t, valid, delta=delta, l_max=l_max, backend=backend,
-            zone_chunk=zone_chunk,
-        )
-        local = aggregation.aggregate_zones(codes, lengths, signs)
+        local = executor.scan_aggregate(u, v, t, valid, signs)
         cap = min(out_cap, local.counts.shape[0])
         overflow = jnp.int32(0)
         if merge_mode == "hierarchical":
@@ -114,12 +114,11 @@ def make_mine_fn(
         overflow = jax.lax.psum(overflow, axes)
         return merged, overflow
 
-    return jax.shard_map(
+    return shard_map_compat(
         step,
         mesh=mesh,
         in_specs=(zone_spec, zone_spec, zone_spec, zone_spec, scalar_spec),
         out_specs=(CodeCounts(P(), P(), P()), P()),
-        check_vma=False,  # scan carry is created inside the shard
     )
 
 
@@ -133,16 +132,17 @@ def mine_on_mesh(
     mesh: jax.sharding.Mesh,
     axes: tuple[str, ...],
     *,
-    delta: int,
-    l_max: int,
+    executor: MiningExecutor | None = None,
+    delta: int | None = None,
+    l_max: int | None = None,
     backend: str = "ref",
     zone_chunk: int | None = None,
     out_cap: int = 65536,
 ) -> CodeCounts:
     """Run distributed discovery over a host-built :class:`ZoneBatch`."""
     fn = make_mine_step(
-        mesh, axes, delta=delta, l_max=l_max, backend=backend,
-        zone_chunk=zone_chunk or 0, out_cap=out_cap,
+        mesh, axes, executor=executor, delta=delta, l_max=l_max,
+        backend=backend, zone_chunk=zone_chunk or 0, out_cap=out_cap,
     )
     counts, overflow = fn(
         jnp.asarray(batch.u), jnp.asarray(batch.v), jnp.asarray(batch.t),

@@ -1,12 +1,19 @@
-"""Jit'd wrappers exposing the Pallas zone-scan with the reference API."""
+"""Jit'd wrappers exposing the Pallas zone-scan with the reference API.
+
+This module is the "pallas" entry in :mod:`repro.core.backends`: the
+registry's lazy loader resolves to :func:`scan_zones`.  The kernel's tile
+sizes are the registry's ``PALLAS_BLOCK_DEFAULTS`` (a single source of
+truth importable without Pallas) rather than being hard-coded at call
+sites.
+"""
 
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
 
+from repro.core.backends import PALLAS_BLOCK_DEFAULTS as DEFAULT_BLOCKS
 from repro.core.expansion import ZoneResult
 
 from .zone_scan import zone_scan_pallas
@@ -17,7 +24,8 @@ from .zone_scan import zone_scan_pallas
 )
 def scan_zone(
     u, v, t, valid, *, delta: int, l_max: int,
-    c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+    c_blk: int = DEFAULT_BLOCKS["c_blk"], e_blk: int = DEFAULT_BLOCKS["e_blk"],
+    interpret: bool | None = None,
 ) -> ZoneResult:
     code, length = zone_scan_pallas(
         u, v, t, valid, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
@@ -28,7 +36,8 @@ def scan_zone(
 
 def scan_zones(
     u, v, t, valid, *, delta: int, l_max: int,
-    c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+    c_blk: int = DEFAULT_BLOCKS["c_blk"], e_blk: int = DEFAULT_BLOCKS["e_blk"],
+    interpret: bool | None = None,
 ) -> ZoneResult:
     """vmap over a [Z, E] zone batch (same signature as the reference)."""
     fn = functools.partial(

@@ -5,6 +5,11 @@
 Runs TZP partitioning + (optionally multi-device) parallel expansion +
 signed aggregation, prints the transition tree, and can cross-check against
 the sequential TMC-analog baseline.
+
+``--stream --chunk-edges N`` replays the dataset as an incremental stream
+through :class:`repro.core.StreamingMiner` (per-chunk latency + sustained
+edges/sec); combine with ``--check-sequential`` to verify the final
+snapshot against the sequential baseline.
 """
 
 from __future__ import annotations
@@ -13,36 +18,18 @@ import argparse
 import json
 import time
 
-from repro.core import discover, discover_sequential
+from repro.core import (
+    StreamingMiner,
+    available_backends,
+    discover,
+    discover_sequential,
+)
+from repro.core.streaming import replay_stream
 from repro.data import synthetic_graphs
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--dataset", default="wikitalk-like",
-                    choices=sorted(synthetic_graphs.DATASET_ANALOGS))
-    ap.add_argument("--delta", type=int, default=600)
-    ap.add_argument("--l-max", type=int, default=6)
-    ap.add_argument("--omega", type=int, default=20)
-    ap.add_argument("--e-cap", type=int, default=None)
-    ap.add_argument("--backend", default="ref", choices=["ref", "pallas"])
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--check-sequential", action="store_true")
-    ap.add_argument("--tree-depth", type=int, default=2)
-    ap.add_argument("--json-out", default=None)
-    args = ap.parse_args()
-
-    graph = synthetic_graphs.make(args.dataset, seed=args.seed)
-    print(f"{args.dataset}: {graph.n_edges} edges, {graph.n_nodes} nodes, "
-          f"span {graph.time_span}s")
-
-    t0 = time.perf_counter()
-    res = discover(
-        graph, delta=args.delta, l_max=args.l_max, omega=args.omega,
-        e_cap=args.e_cap, backend=args.backend,
-    )
-    dt = time.perf_counter() - t0
-    print(f"PTMT: {res.n_zones} zones (cap {res.e_cap}), "
+def _print_result(res, dt: float, label: str) -> None:
+    print(f"{label}: {res.n_zones} zones (cap {res.e_cap}), "
           f"{len(res.counts)} motif types, "
           f"{res.total_processes()} processes in {dt:.2f}s")
     print("level histogram:", dict(sorted(res.level_histogram().items())))
@@ -56,14 +43,74 @@ def main():
                 node.transition_rows(), key=lambda r: -r[1])[:4]:
             print(f"    -> {ccode}: {ccount} ({cshare:.1%})")
 
+
+def _run_stream(args, graph):
+    if args.chunk_edges < 1:
+        raise SystemExit("--chunk-edges must be >= 1")
+    miner = StreamingMiner(
+        delta=args.delta, l_max=args.l_max, omega=args.omega,
+        e_cap=args.e_cap, backend=args.backend,
+    )
+    chunk = args.chunk_edges
+    latencies, dt = replay_stream(miner, graph, chunk)
+    res = miner.snapshot(final=True)
+    if latencies:
+        print(f"stream: {len(latencies)} chunks of {chunk} edges, "
+              f"{graph.n_edges / dt:.0f} edges/s sustained, "
+              f"per-chunk latency "
+              f"mean {1e3 * sum(latencies) / len(latencies):.1f}ms "
+              f"max {1e3 * max(latencies):.1f}ms")
+    print(f"frontier: {miner.n_zones_finalized} zones finalized, "
+          f"{miner.n_edges_retired} edges retired, "
+          f"{miner.buffered_edges} still buffered")
+    _print_result(res, dt, "PTMT-stream")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="wikitalk-like",
+                    choices=sorted(synthetic_graphs.DATASET_ANALOGS))
+    ap.add_argument("--delta", type=int, default=600)
+    ap.add_argument("--l-max", type=int, default=6)
+    ap.add_argument("--omega", type=int, default=20)
+    ap.add_argument("--e-cap", type=int, default=None)
+    ap.add_argument("--backend", default="ref",
+                    choices=list(available_backends()))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--stream", action="store_true",
+                    help="replay the dataset incrementally through "
+                         "StreamingMiner")
+    ap.add_argument("--chunk-edges", type=int, default=4096,
+                    help="edges per ingested chunk in --stream mode")
+    ap.add_argument("--check-sequential", action="store_true")
+    ap.add_argument("--tree-depth", type=int, default=2)
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args()
+
+    graph = synthetic_graphs.make(args.dataset, seed=args.seed)
+    print(f"{args.dataset}: {graph.n_edges} edges, {graph.n_nodes} nodes, "
+          f"span {graph.time_span}s")
+
+    if args.stream:
+        res = _run_stream(args, graph)
+    else:
+        t0 = time.perf_counter()
+        res = discover(
+            graph, delta=args.delta, l_max=args.l_max, omega=args.omega,
+            e_cap=args.e_cap, backend=args.backend,
+        )
+        dt = time.perf_counter() - t0
+        _print_result(res, dt, "PTMT")
+
     if args.check_sequential:
         t0 = time.perf_counter()
         seq = discover_sequential(graph, delta=args.delta,
                                   l_max=args.l_max)
         dt_seq = time.perf_counter() - t0
         match = seq.counts == res.counts
-        print(f"\nsequential TMC-analog: {dt_seq:.2f}s "
-              f"(speedup {dt_seq / dt:.1f}x), exact match: {match}")
+        print(f"\nsequential TMC-analog: {dt_seq:.2f}s, "
+              f"exact match: {match}")
         if not match:
             raise SystemExit("MISMATCH between PTMT and sequential baseline")
 

@@ -6,6 +6,11 @@ and the brute-force oracle *exactly*, for every motif code.
 """
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import discover, discover_sequential, oracle

@@ -1,0 +1,172 @@
+"""MiningExecutor + backend registry: dispatch, chunk policy, oracle parity.
+
+Covers the regression for the pre-refactor silent zone drop: ``_mine_batch``
+computed ``nchunk = z // zone_chunk`` and discarded the remainder zones when
+``zone_chunk`` did not divide the zone count.  The executor must pad (default)
+or raise — never drop.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    MiningExecutor,
+    ZoneChunkError,
+    available_backends,
+    backends,
+    discover,
+    get_backend,
+    oracle,
+    transitions,
+    tzp,
+)
+from conftest import random_graph
+
+
+def _counts_dict(counts):
+    return transitions.counts_to_dict(
+        np.asarray(counts.codes), np.asarray(counts.counts),
+        np.asarray(counts.unique_mask),
+    )
+
+
+def _batch_for(g, *, delta, l_max, omega=2, pad_zones_to=1):
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=omega)
+    return plan, tzp.build_zone_batch(g, plan, pad_zones_to=pad_zones_to)
+
+
+# ---------------------------------------------------------------------------
+# Registry.
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    assert {"ref", "pallas", "numpy"} <= set(available_backends())
+    assert get_backend("ref").jittable
+    assert not get_backend("numpy").jittable
+    assert get_backend("numpy").grade == "oracle"
+    assert get_backend("pallas").block_defaults["c_blk"] > 0
+
+
+def test_unknown_backend_lists_available():
+    with pytest.raises(ValueError, match="available"):
+        get_backend("no-such-backend")
+    with pytest.raises(ValueError, match="available"):
+        MiningExecutor(delta=5, l_max=3, backend="no-such-backend")
+
+
+def test_register_backend_rejects_duplicates_and_accepts_plugins():
+    with pytest.raises(ValueError, match="already registered"):
+        backends.register_backend("ref", lambda: None)
+    spec = backends.register_backend(
+        "test-plugin", lambda: get_backend("ref").scan, grade="reference",
+    )
+    try:
+        assert "test-plugin" in available_backends()
+        g = random_graph(0, 60, 6, 200)
+        got = discover(g, delta=20, l_max=3, omega=2, backend="test-plugin")
+        expect = discover(g, delta=20, l_max=3, omega=2, backend="ref")
+        assert got.counts == expect.counts
+        assert spec.scan is get_backend("ref").scan
+    finally:
+        backends._REGISTRY.pop("test-plugin", None)
+
+
+# ---------------------------------------------------------------------------
+# Zone-chunk divisibility (the silent-drop regression).
+# ---------------------------------------------------------------------------
+
+
+def test_executor_pads_non_divisible_zone_chunk():
+    """z % zone_chunk != 0 must NOT drop the remainder zones."""
+    g = random_graph(7, 350, 10, 900)
+    delta, l_max = 30, 4
+    plan, batch = _batch_for(g, delta=delta, l_max=l_max, omega=2)
+    assert batch.n_zones % 2 == 1, "need an odd zone count for the repro"
+
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    ex = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2)
+    got = _counts_dict(ex.run(batch))
+    assert got == expect
+
+
+def test_executor_raise_policy():
+    g = random_graph(7, 350, 10, 900)
+    plan, batch = _batch_for(g, delta=30, l_max=4)
+    assert batch.n_zones % 2 == 1
+    ex = MiningExecutor(delta=30, l_max=4, zone_chunk=2, pad_policy="raise")
+    with pytest.raises(ZoneChunkError, match="not divisible"):
+        ex.run(batch)
+
+
+def test_traceable_path_raises_on_non_divisible():
+    """Inside a trace there is no host to pad: scan_aggregate must raise."""
+    import jax.numpy as jnp
+
+    ex = MiningExecutor(delta=10, l_max=3, zone_chunk=2)
+    z, e = 5, 8
+    with pytest.raises(ZoneChunkError, match="not divisible"):
+        ex.scan_aggregate(
+            jnp.zeros((z, e), jnp.int32), jnp.zeros((z, e), jnp.int32),
+            jnp.zeros((z, e), jnp.int32), jnp.zeros((z, e), bool),
+            jnp.ones(z, jnp.int32),
+        )
+
+
+def test_chunked_scan_matches_unchunked():
+    g = random_graph(3, 240, 8, 600)
+    delta, l_max = 25, 4
+    plan, batch = _batch_for(g, delta=delta, l_max=l_max, pad_zones_to=4)
+    assert batch.n_zones % 4 == 0
+    base = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=0)
+    chunked = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=4)
+    assert _counts_dict(base.run(batch)) == _counts_dict(chunked.run(batch))
+
+
+# ---------------------------------------------------------------------------
+# NumPy oracle backend.
+# ---------------------------------------------------------------------------
+
+
+def test_numpy_backend_matches_oracle_end_to_end():
+    for seed in range(3):
+        g = random_graph(seed, 180, 9, 500)
+        delta, l_max = 35, 4
+        expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+        got = discover(g, delta=delta, l_max=l_max, omega=3,
+                       backend="numpy")
+        assert got.counts == expect, f"seed={seed}"
+
+
+def test_numpy_scan_matches_ref_scan_per_zone():
+    from repro.core import expansion, scan_numpy
+
+    g = random_graph(11, 120, 7, 400)
+    plan, batch = _batch_for(g, delta=20, l_max=3)
+    a = scan_numpy.scan_zones(batch.u, batch.v, batch.t, batch.valid,
+                              delta=20, l_max=3)
+    b = expansion.scan_zones(batch.u, batch.v, batch.t, batch.valid,
+                             delta=20, l_max=3)
+    np.testing.assert_array_equal(a.length, np.asarray(b.length))
+    np.testing.assert_array_equal(a.code, np.asarray(b.code))
+
+
+def test_numpy_backend_rejected_in_traced_context():
+    ex = MiningExecutor(delta=10, l_max=3, backend="numpy")
+    with pytest.raises(ValueError, match="host-only"):
+        ex.scan_aggregate(
+            np.zeros((2, 8), np.int32), np.zeros((2, 8), np.int32),
+            np.zeros((2, 8), np.int32), np.zeros((2, 8), bool),
+            np.ones(2, np.int32),
+        )
+
+
+def test_mesh_requires_jittable_backend():
+    import jax
+
+    from repro.distributed import mining
+
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("z",))
+    with pytest.raises(ValueError, match="host-only"):
+        mining.make_mine_fn(mesh, ("z",), delta=10, l_max=3,
+                            backend="numpy")

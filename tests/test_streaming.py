@@ -1,0 +1,140 @@
+"""Streaming-vs-batch equivalence (the Lemma 4.2 incremental argument).
+
+``StreamingMiner.snapshot()`` must reproduce batch ``discover()`` **exactly,
+per motif code** on the closed prefix (edges with ``t < t_head - L_b``),
+for arbitrary chunk boundaries — including chunk sizes that do not divide
+the edge count — and for both the reference and the NumPy oracle backends.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import StreamingMiner, TemporalGraph, discover, oracle
+from conftest import random_graph
+
+
+def _prefix(g: TemporalGraph, cut_time: int) -> TemporalGraph:
+    cut = int(np.searchsorted(g.t, cut_time, side="left"))
+    return TemporalGraph(u=g.u[:cut], v=g.v[:cut], t=g.t[:cut],
+                         n_nodes=g.n_nodes)
+
+
+def _feed(miner: StreamingMiner, g: TemporalGraph, chunk: int) -> None:
+    for i in range(0, g.n_edges, chunk):
+        miner.ingest(g.u[i:i + chunk], g.v[i:i + chunk], g.t[i:i + chunk])
+
+
+@pytest.mark.parametrize("backend", ["ref", "numpy"])
+@pytest.mark.parametrize("chunk", [64, 97, 10_000])   # 97 is a non-divisor
+def test_snapshot_matches_batch_on_closed_prefix(backend, chunk):
+    g = random_graph(5, 700, 11, 2_500)
+    delta, l_max, omega = 20, 4, 3
+    miner = StreamingMiner(delta=delta, l_max=l_max, omega=omega,
+                           backend=backend)
+    _feed(miner, g, chunk)
+
+    snap = miner.snapshot()
+    expect = discover(_prefix(g, miner.closed_time), delta=delta,
+                      l_max=l_max, omega=omega, backend=backend)
+    assert snap.counts == expect.counts, f"chunk={chunk}"
+
+    final = miner.snapshot(final=True)
+    full = discover(g, delta=delta, l_max=l_max, omega=omega,
+                    backend=backend)
+    assert final.counts == full.counts, f"chunk={chunk} (final)"
+
+
+def test_intermediate_snapshots_are_exact():
+    """Every mid-stream snapshot equals batch discovery on its prefix, and
+    total process count tracks the prefix edge count (no-fork property)."""
+    g = random_graph(8, 600, 9, 2_000)
+    delta, l_max, omega = 25, 3, 2
+    miner = StreamingMiner(delta=delta, l_max=l_max, omega=omega)
+    chunk = 150
+    for i in range(0, g.n_edges, chunk):
+        miner.ingest(g.u[i:i + chunk], g.v[i:i + chunk], g.t[i:i + chunk])
+        snap = miner.snapshot()
+        prefix = _prefix(g, miner.closed_time)
+        expect = discover(prefix, delta=delta, l_max=l_max, omega=omega)
+        assert snap.counts == expect.counts, f"at edge {i}"
+        assert snap.total_processes() == prefix.n_edges
+
+
+def test_streaming_with_adaptive_e_cap():
+    from repro.data import synthetic_graphs as sg
+
+    g = sg.bursty_stream(500, 12, seed=3)
+    delta, l_max = 60, 4
+    miner = StreamingMiner(delta=delta, l_max=l_max, omega=4, e_cap=64)
+    _feed(miner, g, 120)
+    final = miner.snapshot(final=True)
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    assert final.counts == expect
+
+
+def test_frontier_retires_edges():
+    """The sliding buffer must actually shrink (memory-bounded streaming)."""
+    g = random_graph(2, 900, 10, 9_000)
+    miner = StreamingMiner(delta=10, l_max=3, omega=2)
+    _feed(miner, g, 100)
+    assert miner.n_edges_retired > 0
+    assert miner.buffered_edges < g.n_edges
+    assert miner.buffered_edges + miner.n_edges_retired == g.n_edges
+    assert miner.n_zones_finalized > 0
+
+
+def test_quiet_gap_is_skipped_not_walked():
+    """A long idle period must not spin one finalization per empty window."""
+    miner = StreamingMiner(delta=1, l_max=3, omega=2)
+    miner.ingest([0], [1], [0])
+    miner.ingest([1], [2], [100_000_000])       # would be ~33M empty pairs
+    assert miner.n_zones_finalized <= 4
+    miner.ingest([2], [3], [100_000_050])
+    final = miner.snapshot(final=True)
+    # gaps dwarf delta: every edge is its own 1-edge process (oracle truth;
+    # batch discover would itself walk the gap zone-by-zone here)
+    assert final.counts == {"01": 3}
+
+
+def test_invalid_parameters_rejected():
+    """delta/l_max < 1 must raise up front (not loop forever in _advance)."""
+    with pytest.raises(ValueError, match="delta and l_max"):
+        StreamingMiner(delta=0, l_max=3)
+    with pytest.raises(ValueError, match="delta and l_max"):
+        StreamingMiner(delta=10, l_max=0)
+    with pytest.raises(ValueError, match="omega"):
+        StreamingMiner(delta=10, l_max=3, omega=1)
+
+
+def test_out_of_order_chunk_rejected():
+    miner = StreamingMiner(delta=10, l_max=3)
+    miner.ingest([0], [1], [100])
+    with pytest.raises(ValueError, match="time-ordered"):
+        miner.ingest([1], [2], [50])
+    with pytest.raises(ValueError, match="non-decreasing"):
+        miner.ingest([0, 1], [1, 2], [200, 150])
+
+
+def test_large_epoch_timestamps():
+    """int64 wall-clock timestamps must not overflow the int32 device batch
+    (batches are rebased per zone pair; counts are shift-invariant)."""
+    g = random_graph(4, 400, 8, 1_500)
+    delta, l_max, omega = 20, 3, 2
+    offset = np.int64(3_000_000_000)          # > 2**31
+    miner = StreamingMiner(delta=delta, l_max=l_max, omega=omega)
+    for i in range(0, g.n_edges, 90):
+        miner.ingest(g.u[i:i + 90], g.v[i:i + 90],
+                     g.t[i:i + 90].astype(np.int64) + offset)
+    final = miner.snapshot(final=True)
+    expect = discover(g, delta=delta, l_max=l_max, omega=omega)
+    assert final.counts == expect.counts
+
+
+def test_empty_and_tiny_streams():
+    miner = StreamingMiner(delta=10, l_max=3)
+    assert miner.snapshot().counts == {}
+    miner.ingest(np.array([], int), np.array([], int), np.array([], int))
+    assert miner.snapshot().counts == {}
+    miner.ingest([3], [8], [100])
+    assert miner.snapshot().counts == {}          # head not yet closed
+    assert miner.snapshot(final=True).counts == {"01": 1}

@@ -137,17 +137,21 @@ import jax, jax.numpy as jnp, numpy as np
 from functools import partial
 from repro.distributed.collectives import compressed_psum_int8
 
+from repro.distributed.collectives import shard_map_compat
+
 mesh = jax.make_mesh((4,), ("d",))
 x = jnp.asarray(np.random.default_rng(0).standard_normal((4, 256)),
                 jnp.float32)
 
-@partial(jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec("d"),
-         out_specs=jax.sharding.PartitionSpec("d"), check_vma=False)
+@partial(shard_map_compat, mesh=mesh,
+         in_specs=jax.sharding.PartitionSpec("d"),
+         out_specs=jax.sharding.PartitionSpec("d"))
 def reduce_exact(x):
     return jax.lax.psum(x, "d")
 
-@partial(jax.shard_map, mesh=mesh, in_specs=jax.sharding.PartitionSpec("d"),
-         out_specs=jax.sharding.PartitionSpec("d"), check_vma=False)
+@partial(shard_map_compat, mesh=mesh,
+         in_specs=jax.sharding.PartitionSpec("d"),
+         out_specs=jax.sharding.PartitionSpec("d"))
 def reduce_q(x):
     key = jax.random.PRNGKey(jax.lax.axis_index("d"))
     return compressed_psum_int8(x, "d", key)

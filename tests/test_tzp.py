@@ -1,6 +1,9 @@
 """TZP invariants (Lemma 4.1/4.2 preconditions) via property tests."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import tzp
