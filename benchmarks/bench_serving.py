@@ -1,0 +1,95 @@
+"""Motif serving — sustained multi-tenant ingest and query tail latency.
+
+Replays a synthetic stream into several tenant sessions of
+:class:`repro.serving.motif.MotifService` under the driver's mixed query
+workload and reports:
+
+  * sustained ingest edges/sec across all tenants (batched admission);
+  * query p50/p99 latency and the snapshot-cache hit rate (epoch-keyed, so
+    every query between two frontier advances after the first is a hit);
+  * a correctness audit: each tenant's served counts must equal batch
+    ``discover`` on its closed prefix.
+
+``run(smoke=True)`` shrinks sizes for the CI suite-registry smoke check.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import from_edges
+from repro.launch.serve_motifs import (
+    build_report,
+    run_workload,
+    tenant_streams,
+    verify_against_batch,
+)
+from repro.serving.motif import MotifService
+
+from .common import csv_row
+
+DELTA, L_MAX, OMEGA = 40, 4, 3
+
+
+def _make_stream(n, nodes=40, span_per_edge=8, seed=11):
+    rng = np.random.default_rng(seed)
+    return from_edges(
+        rng.integers(0, nodes, n), rng.integers(0, nodes, n),
+        np.sort(rng.integers(0, span_per_edge * n, n)),
+    )
+
+
+def run(smoke: bool = False) -> list[str]:
+    n_edges = 1_500 if smoke else 6_000
+    tenants = 2 if smoke else 3
+    chunk = 96 if smoke else 256
+    ingest_batch = 192 if smoke else 512
+
+    g = _make_stream(n_edges)
+    streams = tenant_streams(g, tenants)
+    names = [f"tenant{i}" for i in range(tenants)]
+    service = MotifService(delta=DELTA, l_max=L_MAX, omega=OMEGA,
+                           ingest_batch=ingest_batch)
+    for name in names:
+        service.create_session(name)
+
+    t0 = time.perf_counter()
+    ingest_lat, query_lat = run_workload(
+        service, streams, names, chunk_edges=chunk, queries_per_chunk=4,
+    )
+    wall = time.perf_counter() - t0
+
+    report = build_report(service, names, g.n_edges, wall,
+                          ingest_lat, query_lat)
+    verify_rows = verify_against_batch(
+        service, names, streams, delta=DELTA, l_max=L_MAX, omega=OMEGA)
+    # match is None when the batch reference itself overflowed (only the
+    # stream side is exact there) — mirror the driver and skip those rows
+    exact = all(row["match"] for row in verify_rows
+                if row["match"] is not None)
+
+    rows = [
+        csv_row(
+            f"serving/ingest_t{tenants}",
+            report["ingest_p50_ms"] / 1e3,
+            f"edges_per_s={report['ingest_edges_per_s']:.0f};"
+            f"chunk_p99_ms={report['ingest_p99_ms']:.1f};"
+            f"admission_batch={ingest_batch}",
+        ),
+        csv_row(
+            f"serving/query_t{tenants}",
+            report["query_p50_ms"] / 1e3,
+            f"p99_ms={report['query_p99_ms']:.2f};n={report['queries']};"
+            f"hit_rate={report['cache_hit_rate']:.2f};"
+            f"snapshots={report['snapshots_mined']};"
+            f"exact={'yes' if exact else 'NO'}",
+        ),
+    ]
+    assert exact, "served counts diverged from batch discover"
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

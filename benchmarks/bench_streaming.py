@@ -30,13 +30,14 @@ def _make_stream(n=4_000, nodes=40, span=30_000, seed=11):
     )
 
 
-def run() -> list[str]:
+def run(smoke: bool = False) -> list[str]:
     rows = []
-    g = _make_stream()
+    g = _make_stream(n=1_000 if smoke else 4_000)
     batch = discover(g, delta=DELTA, l_max=L_MAX, omega=OMEGA)
 
-    # 768 does not divide the 4000-edge stream — exercises the ragged tail
-    for chunk in (256, 768, 1024):
+    # at least one size does not divide the stream — exercises the ragged tail
+    chunks = (128, 192) if smoke else (256, 768, 1024)
+    for chunk in chunks:
         miner = StreamingMiner(delta=DELTA, l_max=L_MAX, omega=OMEGA)
         latencies, total = replay_stream(miner, g, chunk)
         snap = miner.snapshot(final=True)

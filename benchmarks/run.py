@@ -1,13 +1,16 @@
 """Benchmark harness — one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--only fig9]
+    PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke]
 
-Prints ``name,us_per_call,derived`` CSV rows.
+Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` runs suites that
+support it (a ``run(smoke=...)`` signature) at tiny sizes — the CI mode that
+catches suite-registry breakage without paying full benchmark cost.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -19,6 +22,7 @@ from . import (
     bench_runtime,
     bench_scalability,
     bench_sensitivity,
+    bench_serving,
     bench_streaming,
     bench_tzp,
 )
@@ -33,6 +37,7 @@ SUITES = {
     "perf_mining": bench_perf_mining,
     "roofline": bench_roofline,
     "streaming": bench_streaming,
+    "serving": bench_serving,
 }
 
 
@@ -40,6 +45,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="substring filter on suite name")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes where the suite supports run(smoke=...)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -47,8 +54,11 @@ def main() -> None:
     for name, mod in SUITES.items():
         if args.only and args.only not in name:
             continue
+        kwargs = {}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            for row in mod.run():
+            for row in mod.run(**kwargs):
                 print(row, flush=True)
         except Exception as exc:  # keep the harness going
             failures += 1

@@ -110,6 +110,34 @@ def encode_process_np(edges, l_max: int) -> np.ndarray:
     return encode_digits_np(digits, l_max)
 
 
+def prefix_range_np(s: str, l_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """Inclusive limb-code bounds of every code extending prefix ``s``.
+
+    Because digits are big-endian within fixed-width limbs and padding is 0,
+    the codes whose label string starts with ``s`` are exactly the codes
+    ``c`` with ``lo <= c <= hi`` in integer-lexicographic limb order, where
+    ``lo`` is ``s`` followed by zero digits and ``hi`` is ``s`` followed by
+    all-0xF digits.  This is what lets the serving layer answer
+    ``prefix_count`` with two binary searches over a sorted code index
+    instead of a full scan.
+    """
+    lo = encode_label_string_np(s, l_max)
+    hi = lo.copy()
+    for pos in range(len(s), n_limbs(l_max) * DIGITS_PER_LIMB):
+        hi[pos // DIGITS_PER_LIMB] |= 0xF << digit_shift(pos)
+    return lo, hi
+
+
+def code_key_np(limbs) -> bytes:
+    """Limb code → big-endian byte key; bytewise order == integer-lex order.
+
+    Each int32 limb is non-negative (28 data bits), so serializing limbs as
+    big-endian uint32 and concatenating preserves the integer-lexicographic
+    order on limb tuples under plain ``bytes`` comparison.
+    """
+    return np.ascontiguousarray(np.asarray(limbs), dtype=">u4").tobytes()
+
+
 def prefix_code_np(limbs, level: int) -> np.ndarray:
     """Truncate a limb code to its first ``level`` edges (2*level digits)."""
     limbs = np.asarray(limbs).copy()

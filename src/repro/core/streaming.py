@@ -124,6 +124,8 @@ class StreamingMiner:
         self.n_edges_ingested = 0
         self.n_edges_retired = 0            # dropped from the buffer
         self.n_zones_finalized = 0
+        self._epoch = 0
+        self._closed_sig: tuple = (None, 0)
 
     # -- stream state -------------------------------------------------------
 
@@ -141,6 +143,22 @@ class StreamingMiner:
     @property
     def buffered_edges(self) -> int:
         return int(self._t.shape[0])
+
+    @property
+    def epoch(self) -> int:
+        """Monotone counter that bumps exactly when the closed prefix changes.
+
+        ``snapshot()`` (non-final) is a pure function of the closed prefix:
+        the merged finalized-pair counts plus the buffered edges with ``t <
+        closed_time``.  Both can only change when ``closed_time`` advances or
+        a pair finalizes — newly ingested edges always satisfy ``t >=
+        t_head_old > closed_time_old`` and so never land inside an unchanged
+        closed prefix.  Equal epochs therefore guarantee equal snapshots,
+        which makes epoch-keyed snapshot caches (the serving layer) exact:
+        invalidation happens precisely when the answer could differ, never on
+        a clock.
+        """
+        return self._epoch
 
     # -- ingestion ----------------------------------------------------------
 
@@ -168,6 +186,10 @@ class StreamingMiner:
             self._s = int(self._t[0])
         self.n_edges_ingested += int(t.size)
         self._advance()
+        sig = (self.closed_time, self.n_zones_finalized)
+        if sig != self._closed_sig:
+            self._closed_sig = sig
+            self._epoch += 1
 
     def _advance(self) -> None:
         """Finalize every growth/boundary pair fully behind the frontier."""

@@ -10,6 +10,12 @@ the sequential TMC-analog baseline.
 through :class:`repro.core.StreamingMiner` (per-chunk latency + sustained
 edges/sec); combine with ``--check-sequential`` to verify the final
 snapshot against the sequential baseline.
+
+Batch and stream runs emit the **same** end-of-run summary, and
+``--out-json FILE`` writes it with one schema for both modes (stream-only
+frontier stats live under a ``stream`` key that is ``null`` for batch
+runs) — downstream tooling never special-cases stream output.
+``--json-out`` keeps the legacy counts-only dump.
 """
 
 from __future__ import annotations
@@ -44,6 +50,35 @@ def _print_result(res, dt: float, label: str) -> None:
             print(f"    -> {ccode}: {ccount} ({cshare:.1%})")
 
 
+def _summary(args, graph, res, dt: float, mode: str,
+             stream_stats: dict | None) -> dict:
+    """One schema for batch and stream runs (``stream`` is null for batch)."""
+    return {
+        "mode": mode,
+        "dataset": args.dataset,
+        "seed": args.seed,
+        "backend": args.backend,
+        "delta": args.delta,
+        "l_max": args.l_max,
+        "omega": args.omega,
+        "e_cap": args.e_cap,
+        "n_edges": graph.n_edges,
+        "n_nodes": graph.n_nodes,
+        "seconds": dt,
+        "edges_per_s": graph.n_edges / dt if dt else 0.0,
+        "n_zones": res.n_zones,
+        "zone_e_cap": res.e_cap,
+        "overflow": res.overflow,
+        "motif_types": len(res.counts),
+        "total_processes": res.total_processes(),
+        "level_histogram": {
+            str(k): v for k, v in sorted(res.level_histogram().items())
+        },
+        "counts": res.counts,
+        "stream": stream_stats,
+    }
+
+
 def _run_stream(args, graph):
     if args.chunk_edges < 1:
         raise SystemExit("--chunk-edges must be >= 1")
@@ -54,17 +89,28 @@ def _run_stream(args, graph):
     chunk = args.chunk_edges
     latencies, dt = replay_stream(miner, graph, chunk)
     res = miner.snapshot(final=True)
+    stream_stats = {
+        "chunk_edges": chunk,
+        "chunks": len(latencies),
+        "mean_chunk_ms": (1e3 * sum(latencies) / len(latencies)
+                          if latencies else 0.0),
+        "max_chunk_ms": 1e3 * max(latencies) if latencies else 0.0,
+        "zones_finalized": miner.n_zones_finalized,
+        "edges_retired": miner.n_edges_retired,
+        "buffered_edges": miner.buffered_edges,
+        "epoch": miner.epoch,
+    }
     if latencies:
         print(f"stream: {len(latencies)} chunks of {chunk} edges, "
               f"{graph.n_edges / dt:.0f} edges/s sustained, "
               f"per-chunk latency "
-              f"mean {1e3 * sum(latencies) / len(latencies):.1f}ms "
-              f"max {1e3 * max(latencies):.1f}ms")
+              f"mean {stream_stats['mean_chunk_ms']:.1f}ms "
+              f"max {stream_stats['max_chunk_ms']:.1f}ms")
     print(f"frontier: {miner.n_zones_finalized} zones finalized, "
           f"{miner.n_edges_retired} edges retired, "
           f"{miner.buffered_edges} still buffered")
     _print_result(res, dt, "PTMT-stream")
-    return res
+    return res, dt, stream_stats
 
 
 def main():
@@ -85,7 +131,11 @@ def main():
                     help="edges per ingested chunk in --stream mode")
     ap.add_argument("--check-sequential", action="store_true")
     ap.add_argument("--tree-depth", type=int, default=2)
-    ap.add_argument("--json-out", default=None)
+    ap.add_argument("--out-json", default=None,
+                    help="write the full run summary (same schema for "
+                         "batch and stream modes)")
+    ap.add_argument("--json-out", default=None,
+                    help="legacy counts-only JSON dump")
     args = ap.parse_args()
 
     graph = synthetic_graphs.make(args.dataset, seed=args.seed)
@@ -93,7 +143,8 @@ def main():
           f"span {graph.time_span}s")
 
     if args.stream:
-        res = _run_stream(args, graph)
+        res, dt, stream_stats = _run_stream(args, graph)
+        mode = "stream"
     else:
         t0 = time.perf_counter()
         res = discover(
@@ -101,6 +152,8 @@ def main():
             e_cap=args.e_cap, backend=args.backend,
         )
         dt = time.perf_counter() - t0
+        stream_stats = None
+        mode = "batch"
         _print_result(res, dt, "PTMT")
 
     if args.check_sequential:
@@ -113,6 +166,12 @@ def main():
               f"exact match: {match}")
         if not match:
             raise SystemExit("MISMATCH between PTMT and sequential baseline")
+
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump(_summary(args, graph, res, dt, mode, stream_stats),
+                      f, indent=1, sort_keys=True)
+        print(f"summary written to {args.out_json}")
 
     if args.json_out:
         with open(args.json_out, "w") as f:

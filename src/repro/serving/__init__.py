@@ -1,3 +1,3 @@
-from . import engine
+from . import engine, motif
 
-__all__ = ["engine"]
+__all__ = ["engine", "motif"]

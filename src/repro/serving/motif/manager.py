@@ -1,0 +1,77 @@
+"""Multi-tenant session registry.
+
+The manager owns the name -> :class:`MotifSession` mapping and nothing else:
+per-session concurrency lives on each session's lock, so tenants never
+contend with each other on the hot ingest/query paths — the manager lock is
+held only for registry mutations and listings.
+"""
+
+from __future__ import annotations
+
+import threading
+
+from .session import MotifSession
+
+
+class SessionManager:
+    """Hosts many named tenant sessions with a bounded session count."""
+
+    def __init__(self, *, max_sessions: int = 64, **session_defaults):
+        if max_sessions < 1:
+            raise ValueError("max_sessions must be >= 1")
+        self.max_sessions = int(max_sessions)
+        self.session_defaults = dict(session_defaults)
+        self._sessions: dict[str, MotifSession] = {}
+        self._lock = threading.Lock()
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def create(self, name: str, **params) -> MotifSession:
+        """Create a tenant session; defaults fill any unspecified params."""
+        merged = {**self.session_defaults, **params}
+        with self._lock:
+            if name in self._sessions:
+                raise ValueError(f"session {name!r} already exists")
+            if len(self._sessions) >= self.max_sessions:
+                raise RuntimeError(
+                    f"session limit reached ({self.max_sessions}); "
+                    f"drop a tenant before creating {name!r}"
+                )
+            session = MotifSession(name, **merged)
+            self._sessions[name] = session
+            return session
+
+    def get(self, name: str) -> MotifSession:
+        with self._lock:
+            try:
+                return self._sessions[name]
+            except KeyError:
+                raise KeyError(f"unknown session {name!r}") from None
+
+    def drop(self, name: str) -> MotifSession:
+        """Remove and return a session (its miner state stays usable)."""
+        with self._lock:
+            try:
+                return self._sessions.pop(name)
+            except KeyError:
+                raise KeyError(f"unknown session {name!r}") from None
+
+    def names(self) -> list[str]:
+        with self._lock:
+            return sorted(self._sessions)
+
+    def stats(self) -> dict:
+        with self._lock:
+            sessions = list(self._sessions.values())
+        per_session = [s.stats() for s in sessions]
+        return {
+            "n_sessions": len(per_session),
+            "max_sessions": self.max_sessions,
+            "edges_accepted": sum(s["edges_accepted"] for s in per_session),
+            "queries": sum(s["queries"] for s in per_session),
+            "snapshots_mined": sum(s["snapshots_mined"] for s in per_session),
+            "cache_hits": sum(s["cache"]["hits"] for s in per_session),
+            "cache_misses": sum(s["cache"]["misses"] for s in per_session),
+            "sessions": per_session,
+        }

@@ -1,0 +1,185 @@
+"""One tenant session: a StreamingMiner behind admission + snapshot cache.
+
+A session decouples the tenant-facing arrival rate from the miner's frontier
+advance.  Arriving edges land in a cheap **admission buffer** and are flushed
+to :meth:`StreamingMiner.ingest` only when ``ingest_batch`` edges have
+accumulated (or on an explicit :meth:`flush`) — one sorted `ingest()` per
+batch amortizes the per-call Python and device-dispatch overhead that
+dominates small-chunk streaming.  The admission window also stable-sorts by
+timestamp, so arrivals that are slightly out of order *within* one window
+are repaired for free; ordering across windows is still enforced by the
+miner.
+
+Queries are served from an epoch-keyed :class:`EpochCache` of
+:class:`QueryEngine` objects built over ``miner.snapshot()``.  Because the
+miner's ``epoch`` bumps exactly when the closed prefix changes, repeated
+queries between finalizations reuse the cached engine (no re-mine) and
+invalidation is exact — never time-based.
+
+Consistency model: query answers reflect the **closed prefix of admitted
+edges** — everything with ``t < t_head - L_b`` where ``t_head`` is the
+newest admitted timestamp (exact by Lemma 4.2, see ``core/streaming.py``).
+Edges still in the admission buffer become visible at the next flush.
+"""
+
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from repro.core.streaming import StreamingMiner
+
+from .cache import EpochCache
+from .query import QueryEngine
+
+
+class MotifSession:
+    """A named tenant stream with its own miner, buffer, and cache."""
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        delta: int,
+        l_max: int,
+        omega: int = 20,
+        e_cap: int | None = None,
+        backend: str = "ref",
+        zone_chunk: int | None = None,
+        ingest_batch: int = 4096,
+        cache_capacity: int = 2,
+    ):
+        if ingest_batch < 1:
+            raise ValueError("ingest_batch must be >= 1")
+        self.name = name
+        self.ingest_batch = int(ingest_batch)
+        self.miner = StreamingMiner(
+            delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
+            backend=backend, zone_chunk=zone_chunk,
+        )
+        self.cache = EpochCache(cache_capacity)
+        self.lock = threading.RLock()
+        self._pend_u: list[np.ndarray] = []
+        self._pend_v: list[np.ndarray] = []
+        self._pend_t: list[np.ndarray] = []
+        self._pending = 0
+        self.edges_accepted = 0
+        self.edges_discarded = 0
+        self.flushes = 0
+        self.snapshots_mined = 0
+        self.queries = 0
+
+    # -- state --------------------------------------------------------------
+
+    @property
+    def epoch(self) -> int:
+        return self.miner.epoch
+
+    @property
+    def closed_time(self) -> int | None:
+        return self.miner.closed_time
+
+    @property
+    def pending_edges(self) -> int:
+        return self._pending
+
+    # -- ingest path --------------------------------------------------------
+
+    def ingest(self, u, v, t) -> bool:
+        """Buffer one edge chunk; returns True if it triggered a flush."""
+        u = np.asarray(u, np.int32).ravel()
+        v = np.asarray(v, np.int32).ravel()
+        t = np.asarray(t, np.int64).ravel()
+        if not (u.shape == v.shape == t.shape):
+            raise ValueError("u, v, t must have identical shapes")
+        with self.lock:
+            if t.size:
+                self._pend_u.append(u)
+                self._pend_v.append(v)
+                self._pend_t.append(t)
+                self._pending += int(t.size)
+                self.edges_accepted += int(t.size)
+            if self._pending >= self.ingest_batch:
+                self._flush_locked()
+                return True
+            return False
+
+    def flush(self) -> int:
+        """Admit everything buffered; returns the number of edges admitted."""
+        with self.lock:
+            return self._flush_locked()
+
+    def discard_pending(self) -> int:
+        """Drop the not-yet-admitted window; returns the edges discarded.
+
+        The recovery path after a rejected flush (an edge older than the
+        stream head): without it the bad window would poison every later
+        flush.  Admitted state is untouched.
+        """
+        with self.lock:
+            n = self._pending
+            self._pend_u, self._pend_v, self._pend_t = [], [], []
+            self._pending = 0
+            self.edges_discarded += n
+            return n
+
+    def _flush_locked(self) -> int:
+        n = self._pending
+        if n == 0:
+            return 0
+        u = np.concatenate(self._pend_u)
+        v = np.concatenate(self._pend_v)
+        t = np.concatenate(self._pend_t)
+        order = np.argsort(t, kind="stable")
+        # the miner validates ordering before mutating any state, so on a
+        # rejected window (e.g. an edge older than the stream head) the
+        # buffer is kept intact for the caller to inspect or drop — edges
+        # are never silently lost
+        self.miner.ingest(u[order], v[order], t[order])
+        self._pend_u, self._pend_v, self._pend_t = [], [], []
+        self._pending = 0
+        self.flushes += 1
+        return n
+
+    # -- query path ---------------------------------------------------------
+
+    def engine(self) -> QueryEngine:
+        """Engine for the current epoch; mines a snapshot only on cache miss.
+
+        The miss path mines under the session lock — ``snapshot()`` reads
+        miner buffers that ``ingest`` mutates, so the first query of an
+        epoch does stall concurrent ingest for the mine.  The returned
+        engine is immutable and stamped with its epoch, so everything
+        *after* the fetch (query evaluation, lazy index builds) runs
+        lock-free and cache hits cost only the epoch lookup.
+        """
+        with self.lock:
+            self.queries += 1
+            epoch = self.miner.epoch
+            engine = self.cache.get(epoch)
+            if engine is None:
+                engine = QueryEngine(self.miner.snapshot(), epoch=epoch)
+                self.snapshots_mined += 1
+                self.cache.put(epoch, engine)
+            return engine
+
+    # -- reporting ----------------------------------------------------------
+
+    def stats(self) -> dict:
+        with self.lock:
+            return {
+                "name": self.name,
+                "epoch": self.miner.epoch,
+                "edges_accepted": self.edges_accepted,
+                "edges_discarded": self.edges_discarded,
+                "edges_admitted": self.miner.n_edges_ingested,
+                "pending_edges": self._pending,
+                "flushes": self.flushes,
+                "zones_finalized": self.miner.n_zones_finalized,
+                "edges_retired": self.miner.n_edges_retired,
+                "buffered_edges": self.miner.buffered_edges,
+                "queries": self.queries,
+                "snapshots_mined": self.snapshots_mined,
+                "cache": self.cache.stats(),
+            }

@@ -1,0 +1,327 @@
+"""Motif serving subsystem — correctness under multi-tenant concurrency.
+
+The load-bearing guarantees:
+
+* interleaved ingest+query across >= 2 tenant sessions answers exactly what
+  batch ``discover()`` answers on each session's closed prefix of admitted
+  edges (Lemma 4.2 lifted to the serving layer);
+* repeated queries within one epoch hit the snapshot cache — no re-mine —
+  and the epoch counter bumps only when the closed prefix changes;
+* the whole stack is thread-safe: concurrent ingest and query threads on
+  disjoint sessions never corrupt state or serve non-snapshot answers.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import TemporalGraph, discover, transitions
+from repro.core.streaming import StreamingMiner
+from repro.serving.motif import (
+    EpochCache,
+    MotifService,
+    QueryRequest,
+    SessionManager,
+)
+from conftest import random_graph
+
+DELTA, L_MAX, OMEGA = 20, 4, 3
+
+
+def closed_prefix(g: TemporalGraph, closed_time: int) -> TemporalGraph:
+    cut = int(np.searchsorted(g.t, closed_time, side="left"))
+    return TemporalGraph(u=g.u[:cut], v=g.v[:cut], t=g.t[:cut],
+                         n_nodes=g.n_nodes)
+
+
+def make_service(**kw):
+    params = dict(delta=DELTA, l_max=L_MAX, omega=OMEGA)
+    params.update(kw)
+    return MotifService(**params)
+
+
+def assert_queries_match_batch(service, name, g, backend="ref"):
+    """Every query op must agree with batch discover on the closed prefix."""
+    sess = service.manager.get(name)
+    expect = discover(closed_prefix(g, sess.closed_time), delta=DELTA,
+                      l_max=L_MAX, omega=OMEGA, backend=backend)
+    tree = expect.tree()
+
+    engine = sess.engine()
+    assert engine.result.counts == expect.counts
+
+    hist = service.query(QueryRequest(session=name, op="level_histogram"))
+    assert hist.payload == expect.level_histogram()
+
+    total = service.query(QueryRequest(session=name, op="total"))
+    assert total.payload == expect.total_processes()
+
+    for level in range(1, L_MAX + 1):
+        top = service.query(
+            QueryRequest(session=name, op="top_k", level=level, k=5))
+        want = sorted(
+            ((c, n) for c, n in expect.counts.items()
+             if len(c) // 2 == level),
+            key=lambda kv: (-kv[1], kv[0]))[:5]
+        assert top.payload == want
+
+    for code in list(expect.counts)[:10]:
+        for lvl in range(2, len(code) + 1, 2):
+            prefix = code[:lvl]
+            cnt = service.query(
+                QueryRequest(session=name, op="prefix_count", code=prefix))
+            assert cnt.payload == tree.node(prefix).through
+            probs = service.query(QueryRequest(
+                session=name, op="transition_probs", code=prefix))
+            want_rows = tree.node(prefix).transition_rows()
+            assert [(r.code, r.count, r.share) for r in probs.payload] \
+                == want_rows
+            if want_rows:
+                assert sum(r.share for r in probs.payload) \
+                    == pytest.approx(1.0)
+
+
+def test_interleaved_ingest_query_two_tenants_matches_batch():
+    """The acceptance scenario: two tenants, ingest and queries interleaved
+    chunk by chunk; answers always equal batch discover on the closed
+    prefix of admitted edges."""
+    graphs = {"a": random_graph(5, 600, 11, 2_200),
+              "b": random_graph(13, 500, 9, 1_800)}
+    service = make_service(ingest_batch=1)       # admit every chunk
+    for name in graphs:
+        service.create_session(name)
+
+    chunk = 120
+    for i in range(0, 600, chunk):
+        for name, g in graphs.items():
+            service.ingest(name, g.u[i:i + chunk], g.v[i:i + chunk],
+                           g.t[i:i + chunk])
+        # query both tenants between every pair of ingests
+        for name, g in graphs.items():
+            sess = service.manager.get(name)
+            if sess.closed_time is None:
+                continue
+            expect = discover(closed_prefix(g, sess.closed_time),
+                              delta=DELTA, l_max=L_MAX, omega=OMEGA)
+            assert sess.engine().result.counts == expect.counts, \
+                f"{name} at edge {i}"
+
+    for name, g in graphs.items():
+        assert_queries_match_batch(service, name, g)
+
+
+def test_batched_admission_defers_then_matches():
+    """Edges below the admission threshold stay pending (one miner ingest
+    per flush); after flush the served state matches batch discover."""
+    g = random_graph(3, 400, 8, 1_500)
+    service = make_service(ingest_batch=10_000)  # never auto-flush
+    service.create_session("a")
+    for i in range(0, g.n_edges, 37):
+        ack = service.ingest("a", g.u[i:i + 37], g.v[i:i + 37],
+                             g.t[i:i + 37])
+        assert not ack.flushed
+    sess = service.manager.get("a")
+    assert sess.pending_edges == g.n_edges
+    assert sess.miner.n_edges_ingested == 0
+    assert sess.epoch == 0
+
+    ack = service.flush("a")
+    assert ack.flushed and ack.accepted == g.n_edges
+    assert sess.pending_edges == 0
+    assert sess.miner.n_edges_ingested == g.n_edges
+    assert sess.flushes == 1                     # one miner ingest total
+    assert_queries_match_batch(service, "a", g)
+
+
+def test_admission_window_repairs_local_disorder():
+    """Slightly out-of-order arrivals inside one admission window are
+    stable-sorted at flush instead of rejected."""
+    service = make_service(ingest_batch=10_000)
+    service.create_session("a")
+    service.ingest("a", [0, 1], [1, 2], [50, 40])     # locally out of order
+    service.ingest("a", [2, 3], [3, 4], [10, 60])
+    service.flush("a")
+    sess = service.manager.get("a")
+    assert sess.miner.n_edges_ingested == 4
+    final = sess.miner.snapshot(final=True)
+    assert final.total_processes() == 4
+
+
+def test_rejected_flush_keeps_admission_buffer():
+    """A window the miner rejects (an edge older than the stream head) must
+    not lose the buffered edges — the buffer survives for inspection."""
+    service = make_service(ingest_batch=10_000)
+    service.create_session("a")
+    service.ingest("a", [0, 1], [1, 2], [100, 200])
+    service.flush("a")
+    sess = service.manager.get("a")
+    service.ingest("a", np.arange(9), np.arange(1, 10),
+                   np.arange(300, 309))
+    service.ingest("a", [9], [10], [50])         # older than the head
+    with pytest.raises(ValueError, match="time-ordered"):
+        service.flush("a")
+    assert sess.pending_edges == 10              # nothing silently dropped
+    assert sess.miner.n_edges_ingested == 2
+
+    # recovery: discard the poisoned window, then the session serves again
+    assert service.discard_pending("a") == 10
+    assert sess.pending_edges == 0
+    service.ingest("a", [20], [21], [400])
+    service.flush("a")
+    assert sess.miner.n_edges_ingested == 3
+    assert sess.stats()["edges_discarded"] == 10
+
+
+def test_cache_hit_no_remine_within_epoch():
+    """Repeated queries within an epoch must reuse the mined snapshot."""
+    g = random_graph(9, 500, 10, 2_000)
+    service = make_service(ingest_batch=1)
+    service.create_session("a")
+    service.ingest("a", g.u[:400], g.v[:400], g.t[:400])
+    sess = service.manager.get("a")
+
+    for _ in range(5):
+        service.query(QueryRequest(session="a", op="level_histogram"))
+        service.query(QueryRequest(session="a", op="top_k", level=1))
+    stats = sess.stats()
+    assert stats["snapshots_mined"] == 1         # mined once, served 10x
+    assert stats["cache"]["hits"] == 9
+    epoch_before = sess.epoch
+
+    # new edges advance the closed prefix -> exactly one more mine
+    service.ingest("a", g.u[400:], g.v[400:], g.t[400:])
+    assert sess.epoch > epoch_before
+    for _ in range(3):
+        service.query(QueryRequest(session="a", op="total"))
+    stats = sess.stats()
+    assert stats["snapshots_mined"] == 2
+    assert stats["cache"]["hits"] == 9 + 2
+
+
+def test_epoch_bumps_only_when_closed_prefix_changes():
+    miner = StreamingMiner(delta=10, l_max=2, omega=2)
+    assert miner.epoch == 0
+    miner.ingest([0], [1], [100])
+    e1 = miner.epoch
+    assert e1 == 1                               # closed_time appeared
+    miner.ingest([1], [2], [100])                # same t_head, no finalize
+    assert miner.epoch == e1
+    miner.ingest([2], [3], [500])                # head advances
+    assert miner.epoch > e1
+
+
+def test_query_response_protocol_fields():
+    g = random_graph(2, 300, 7, 1_000)
+    service = make_service(ingest_batch=1)
+    service.create_session("a")
+    service.ingest("a", g.u, g.v, g.t)
+    sess = service.manager.get("a")
+    resp = service.query(QueryRequest(session="a", op="prefix_count",
+                                      code="01"))
+    assert resp.session == "a"
+    assert resp.op == "prefix_count"
+    assert resp.epoch == sess.epoch
+    assert resp.latency_s >= 0.0
+    assert isinstance(resp.payload, int)
+
+    with pytest.raises(ValueError, match="unknown op"):
+        service.query(QueryRequest(session="a", op="nope"))
+    with pytest.raises(KeyError, match="unknown session"):
+        service.query(QueryRequest(session="ghost", op="total"))
+    with pytest.raises(ValueError, match="odd length"):
+        service.query(QueryRequest(session="a", op="prefix_count", code="0"))
+    # unknown-but-well-formed codes are cheap misses, not errors —
+    # in-alphabet ("ee"), out-of-alphabet ("ff", "zz"), and codes longer
+    # than l_max edges ("01" * 8 with l_max=4) alike
+    for code in ("ee", "ff", "zz", "01" * 8):
+        empty = service.query(QueryRequest(
+            session="a", op="transition_probs", code=code))
+        assert empty.payload == []
+        zero = service.query(QueryRequest(session="a", op="prefix_count",
+                                          code=code))
+        assert zero.payload == 0
+
+
+def test_session_manager_lifecycle():
+    manager = SessionManager(max_sessions=2, delta=DELTA, l_max=L_MAX,
+                             omega=OMEGA)
+    manager.create("a")
+    manager.create("b", delta=50)                # per-tenant override
+    assert manager.get("b").miner.delta == 50
+    assert manager.names() == ["a", "b"]
+    with pytest.raises(ValueError, match="already exists"):
+        manager.create("a")
+    with pytest.raises(RuntimeError, match="session limit"):
+        manager.create("c")
+    manager.drop("a")
+    manager.create("c")
+    with pytest.raises(KeyError, match="unknown session"):
+        manager.get("a")
+    stats = manager.stats()
+    assert stats["n_sessions"] == 2
+
+
+def test_epoch_cache_lru_and_stats():
+    cache = EpochCache(capacity=2)
+    assert cache.get(0) is None
+    cache.put(0, "e0")
+    cache.put(1, "e1")
+    assert cache.get(0) == "e0"                  # refreshes LRU order
+    cache.put(2, "e2")                           # evicts epoch 1
+    assert cache.get(1) is None
+    assert cache.get(0) == "e0"
+    stats = cache.stats()
+    assert stats == {"hits": 2, "misses": 2, "evictions": 1, "entries": 2}
+    with pytest.raises(ValueError):
+        EpochCache(capacity=0)
+
+
+def test_concurrent_tenants_threaded():
+    """Ingest threads and query threads race across two sessions; the final
+    served state must still equal batch discover per tenant.  The numpy
+    oracle backend keeps this pure host-side."""
+    graphs = {"a": random_graph(21, 400, 8, 1_500),
+              "b": random_graph(22, 400, 8, 1_500)}
+    service = make_service(backend="numpy", ingest_batch=64)
+    for name in graphs:
+        service.create_session(name)
+
+    errors: list[Exception] = []
+    done = threading.Event()
+
+    def ingester(name, g):
+        try:
+            for i in range(0, g.n_edges, 50):
+                service.ingest(name, g.u[i:i + 50], g.v[i:i + 50],
+                               g.t[i:i + 50])
+        except Exception as exc:                 # pragma: no cover
+            errors.append(exc)
+
+    def querier(name):
+        try:
+            while not done.is_set():
+                r = service.query(
+                    QueryRequest(session=name, op="level_histogram"))
+                assert isinstance(r.payload, dict)
+                r = service.query(
+                    QueryRequest(session=name, op="prefix_count", code="01"))
+                assert r.payload >= 0
+        except Exception as exc:                 # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=ingester, args=(n, g))
+               for n, g in graphs.items()]
+    threads += [threading.Thread(target=querier, args=(n,)) for n in graphs]
+    for t in threads:
+        t.start()
+    for t in threads[:2]:
+        t.join()
+    done.set()
+    for t in threads[2:]:
+        t.join()
+    assert not errors, errors
+
+    for name, g in graphs.items():
+        service.flush(name)
+        assert_queries_match_batch(service, name, g, backend="numpy")

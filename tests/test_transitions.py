@@ -1,0 +1,95 @@
+"""Transition-tree invariants (core/transitions.py).
+
+The tree is a prefix aggregation of final-code counts; its defining
+invariants are
+
+  * ``through`` at a node == processes whose code extends-or-equals it;
+  * ``evolved == through - stopped`` everywhere;
+  * children's ``through`` sum to the parent's ``evolved`` (every evolving
+    process takes exactly one next step), so ``transition_rows`` shares sum
+    to 1 at every branching node.
+"""
+
+import pytest
+
+from repro.core import discover, transitions
+from conftest import random_graph
+
+KNOWN = {"01": 5, "0101": 3, "0102": 2, "010201": 1}
+
+
+def _walk(tree):
+    stack = [tree.root]
+    while stack:
+        node = stack.pop()
+        yield node
+        stack.extend(node.children.values())
+
+
+def test_build_tree_from_final_counts():
+    tree = transitions.build_tree(KNOWN)
+    total = sum(KNOWN.values())
+    assert tree.root.through == total
+    n01 = tree.node("01")
+    assert n01.through == total          # every code extends "01"
+    assert n01.stopped == 5
+    assert n01.evolved == 6
+    n0101 = tree.node("0101")
+    assert (n0101.through, n0101.stopped, n0101.evolved) == (3, 3, 0)
+    n0102 = tree.node("0102")
+    assert (n0102.through, n0102.stopped, n0102.evolved) == (3, 2, 1)
+    n010201 = tree.node("010201")
+    assert (n010201.through, n010201.stopped) == (1, 1)
+    with pytest.raises(KeyError):
+        tree.node("0103")
+
+
+@pytest.fixture(scope="module")
+def mined_tree():
+    g = random_graph(7, 900, 10, 3_000)
+    res = discover(g, delta=25, l_max=4, omega=3)
+    assert res.overflow == 0
+    return transitions.build_tree(res.counts), res
+
+
+def test_evolved_invariant_everywhere(mined_tree):
+    tree, _ = mined_tree
+    for node in _walk(tree):
+        assert node.evolved == node.through - node.stopped
+        assert node.evolved >= 0
+        assert node.stopped >= 0
+
+
+def test_children_partition_evolved(mined_tree):
+    tree, _ = mined_tree
+    for node in _walk(tree):
+        child_through = sum(ch.through for ch in node.children.values())
+        assert child_through == node.evolved, node.code
+
+
+def test_transition_rows_shares_sum_to_one(mined_tree):
+    tree, _ = mined_tree
+    branching = 0
+    for node in _walk(tree):
+        rows = node.transition_rows()
+        assert len(rows) == len(node.children)
+        if rows:
+            branching += 1
+            assert sum(share for _, _, share in rows) == pytest.approx(1.0)
+            for code, count, share in rows:
+                assert code.startswith(node.code)
+                assert len(code) == len(node.code) + 2
+                assert count == node.children[code].through
+                assert share == pytest.approx(count / node.evolved)
+    assert branching > 0                 # the graph actually branched
+
+
+def test_level_histogram_matches_tree(mined_tree):
+    tree, res = mined_tree
+    hist = transitions.level_histogram(res.counts)
+    assert sum(hist.values()) == tree.root.through == res.total_processes()
+    for level, total in hist.items():
+        assert total == sum(
+            cnt for code, cnt in res.counts.items()
+            if len(code) // 2 == level
+        )
