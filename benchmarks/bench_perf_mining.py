@@ -10,17 +10,29 @@ Measures, on real zone batches (not ShapeDtypeStructs):
    the density-adaptive zone shrinking on a bursty stream — zone padding is
    wasted vector work, so the ratio is a direct work saving;
 3. measured **unique-code populations** per device-shard, validating the
-   hierarchical-merge out_cap used in the dry-run variants.
+   hierarchical-merge out_cap used in the dry-run variants;
+4. **hierarchical chunked aggregation** (core/executor agg modes): measured
+   throughput of legacy whole-batch vs hierarchical fold vs the pipelined
+   runner on one batch, plus the planner's peak-memory model showing the
+   zone-count ceiling move — at a fixed budget the legacy O(Z*C) flatten
+   caps Z, while the hierarchical fold's peak is Z-independent, and the
+   benchmark *runs* the fold at a zone count beyond the legacy cap.
+
+``run_json`` additionally returns a structured payload for
+``benchmarks/run.py --out-json`` (edges/sec + peak-memory estimates — the
+``BENCH_mining.json`` perf trajectory).
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import tzp
+from repro.core import MiningExecutor, planner, transitions, tzp
 from repro.data import synthetic_graphs as sg
 
-from .common import csv_row
+from .common import csv_row, timed
+
+DELTA, L_MAX = 90, 5
 
 
 def _skip_fraction(batch, delta, l_max, c_blk=256, e_blk=256):
@@ -42,17 +54,113 @@ def _skip_fraction(batch, delta, l_max, c_blk=256, e_blk=256):
     return 1.0 - live / max(total, 1)
 
 
-def run() -> list[str]:
+def _legacy_z_ceiling(budget_bytes, e_cap, l_max, zone_chunk) -> int:
+    """Largest zone count whose legacy whole-batch peak fits the budget."""
+    lo, hi = 0, 1 << 30
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        peak = planner.legacy_peak_bytes(mid, e_cap, l_max,
+                                         zone_chunk=zone_chunk)
+        if peak <= budget_bytes:
+            lo = mid
+        else:
+            hi = mid - 1
+    return lo
+
+
+def _hierarchical_section(smoke: bool):
+    """Throughput of the three agg modes + the memory-ceiling move."""
+    n_edges = 4_000 if smoke else 24_000
+    g = sg.poisson_stream(n_edges, 300, rate=0.5, seed=7)
+    # small-omega, e_cap-split zones: many modest zones, the regime where
+    # the O(Z*C) whole-batch flatten is the binding constraint.  The cap
+    # stays above the adaptive floor's edge population (~2*L_b*rate) so no
+    # edges are dropped and counts remain exact.
+    cap = 512 if smoke else 1024
+    plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2, e_cap=cap)
+    zc = 4 if smoke else 8
+    batch = tzp.build_zone_batch(g, plan, e_cap=cap, pad_zones_to=zc)
+
+    modes = {}
+    counts_seen = {}
+    for agg in ("legacy", "hierarchical", "pipelined"):
+        ex = MiningExecutor(delta=DELTA, l_max=L_MAX, zone_chunk=zc, agg=agg)
+        run = lambda: transitions.device_counts_to_dict(ex.run(batch))
+        counts, secs = timed(run, warmup=1, repeats=1 if smoke else 2)
+        counts_seen[agg] = counts
+        modes[agg] = {
+            "seconds": secs,
+            "edges_per_s": g.n_edges / secs if secs else 0.0,
+        }
+    assert counts_seen["hierarchical"] == counts_seen["legacy"] \
+        == counts_seen["pipelined"], "agg modes disagree — differential bug"
+
+    merge_cap = planner.default_merge_cap(zc, batch.e_cap)
+    hier_peak = planner.hierarchical_peak_bytes(
+        zc, batch.e_cap, L_MAX, merge_cap=merge_cap)
+    # the budget IS the fold's own peak: at the memory hierarchical
+    # aggregation needs, how many zones could the legacy flatten hold?
+    budget = hier_peak
+    z_legacy_max = _legacy_z_ceiling(budget, batch.e_cap, L_MAX, zc)
+    legacy_peak_at_run = planner.legacy_peak_bytes(
+        batch.n_zones, batch.e_cap, L_MAX, zone_chunk=zc)
+    ceiling = {
+        "budget_mb": budget / 2**20,
+        "e_cap": batch.e_cap,
+        "zone_chunk": zc,
+        "merge_cap": merge_cap,
+        "hier_peak_mb": hier_peak / 2**20,
+        "legacy_peak_mb_at_run": legacy_peak_at_run / 2**20,
+        "z_max_legacy_at_budget": z_legacy_max,
+        "z_run": batch.n_zones,
+        "ceiling_moved": batch.n_zones > z_legacy_max
+        and hier_peak <= budget,
+        "motif_types": len(counts_seen["hierarchical"]),
+    }
+    throughput = {
+        "edges": g.n_edges,
+        "n_zones": batch.n_zones,
+        "e_cap": batch.e_cap,
+        "zone_chunk": zc,
+        "modes": modes,
+    }
+
+    rows = [
+        csv_row(
+            f"perf_mining/agg_{agg}", m["seconds"],
+            f"edges_per_s={m['edges_per_s']:.0f};zones={batch.n_zones};"
+            f"zone_chunk={zc}",
+        )
+        for agg, m in modes.items()
+    ]
+    rows.append(csv_row(
+        "perf_mining/memory_ceiling", 0.0,
+        f"budget={ceiling['budget_mb']:.1f}MB;"
+        f"legacy_z_max={z_legacy_max};hier_z_run={batch.n_zones};"
+        f"hier_peak={ceiling['hier_peak_mb']:.1f}MB;"
+        f"legacy_peak_at_run={ceiling['legacy_peak_mb_at_run']:.1f}MB;"
+        f"ceiling_moved={ceiling['ceiling_moved']}",
+    ))
+    return rows, {"throughput": throughput, "memory_ceiling": ceiling}
+
+
+def run_json(smoke: bool = False):
+    """Returns (csv rows, structured payload for BENCH_mining.json)."""
     rows = []
-    delta, l_max = 90, 5
+    payload = {"suite": "perf_mining", "smoke": smoke,
+               "delta": DELTA, "l_max": L_MAX}
+    delta, l_max = DELTA, L_MAX
+    scale = 0.1 if smoke else 1.0
 
     # 1) live-window skipping on two regimes (bursts big enough that a
     #    zone spans many kernel blocks)
     for name, gen in (("bursty", sg.bursty_stream(
-                          30_000, 300, burst_size=2_000, burst_span=900,
+                          int(30_000 * scale), 300,
+                          burst_size=int(2_000 * scale) or 100,
+                          burst_span=900,
                           gap_span=20_000, seed=2)),
-                      ("poisson", sg.poisson_stream(20_000, 500, rate=0.5,
-                                                    seed=2))):
+                      ("poisson", sg.poisson_stream(int(20_000 * scale), 500,
+                                                    rate=0.5, seed=2))):
         plan = tzp.plan_zones(gen, delta=delta, l_max=l_max, omega=20)
         batch = tzp.build_zone_batch(gen, plan)
         frac = _skip_fraction(batch, delta, l_max)
@@ -64,13 +172,15 @@ def run() -> list[str]:
 
     # 2) adaptive zoning on a heavy-burst stream
     # bursts longer than 2*L_b so the adaptive planner can split them
-    g = sg.bursty_stream(30_000, 200, burst_size=3_000, burst_span=5_000,
-                         gap_span=36_000, seed=4)
+    g = sg.bursty_stream(int(30_000 * scale), 200,
+                         burst_size=int(3_000 * scale) or 300,
+                         burst_span=5_000, gap_span=36_000, seed=4)
     plan_fixed = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=20)
     b_fixed = tzp.build_zone_batch(g, plan_fixed)
+    e_adapt = 768 if not smoke else 96
     plan_adapt = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=20,
-                                e_cap=768)
-    b_adapt = tzp.build_zone_batch(g, plan_adapt, e_cap=768)
+                                e_cap=e_adapt)
+    b_adapt = tzp.build_zone_batch(g, plan_adapt, e_cap=e_adapt)
     work_fixed = b_fixed.n_zones * b_fixed.e_cap ** 2
     work_adapt = b_adapt.n_zones * b_adapt.e_cap ** 2
     rows.append(csv_row(
@@ -84,13 +194,25 @@ def run() -> list[str]:
     # 3) unique codes per shard (out_cap validation)
     from repro.core import discover, from_edges
 
-    g_small = from_edges(g.u[:8000], g.v[:8000], g.t[:8000])
-    res = discover(g_small, delta=delta, l_max=l_max, omega=8, e_cap=1024)
+    n3 = int(8000 * scale) or 1000
+    g_small = from_edges(g.u[:n3], g.v[:n3], g.t[:n3])
+    res = discover(g_small, delta=delta, l_max=l_max, omega=8, e_cap=1024,
+                   allow_overflow=True)
     rows.append(csv_row(
         "perf_mining/unique_codes", 0.0,
         f"global_unique={len(res.counts)};"
         f"out_cap_16384_headroom={16384 / max(len(res.counts), 1):.0f}x",
     ))
+
+    # 4) hierarchical aggregation: throughput + the memory-ceiling move
+    hier_rows, hier_payload = _hierarchical_section(smoke)
+    rows.extend(hier_rows)
+    payload.update(hier_payload)
+    return rows, payload
+
+
+def run(smoke: bool = False) -> list[str]:
+    rows, _ = run_json(smoke)
     return rows
 
 

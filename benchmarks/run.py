@@ -1,16 +1,22 @@
 """Benchmark harness — one module per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig9] [--smoke]
+        [--out-json BENCH_mining.json]
 
 Prints ``name,us_per_call,derived`` CSV rows.  ``--smoke`` runs suites that
 support it (a ``run(smoke=...)`` signature) at tiny sizes — the CI mode that
 catches suite-registry breakage without paying full benchmark cost.
+
+``--out-json FILE`` additionally collects structured payloads from suites
+exposing ``run_json`` (currently the mining suite: edges/sec + peak-memory
+estimates) so ``BENCH_*.json`` perf history accumulates run over run.
 """
 
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
 import traceback
 
@@ -47,10 +53,14 @@ def main() -> None:
                     help="substring filter on suite name")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes where the suite supports run(smoke=...)")
+    ap.add_argument("--out-json", default=None,
+                    help="write structured results from suites exposing "
+                         "run_json (edges/sec, peak-memory estimates)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
     failures = 0
+    payloads: dict[str, object] = {}
     for name, mod in SUITES.items():
         if args.only and args.only not in name:
             continue
@@ -58,13 +68,22 @@ def main() -> None:
         if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
             kwargs["smoke"] = True
         try:
-            for row in mod.run(**kwargs):
+            if args.out_json and hasattr(mod, "run_json"):
+                rows, payloads[name] = mod.run_json(**kwargs)
+            else:
+                rows = mod.run(**kwargs)
+            for row in rows:
                 print(row, flush=True)
         except Exception as exc:  # keep the harness going
             failures += 1
             print(f"{name},0.0,ERROR={type(exc).__name__}:{exc}",
                   flush=True)
             traceback.print_exc(file=sys.stderr)
+    if args.out_json:
+        with open(args.out_json, "w") as f:
+            json.dump({"argv": sys.argv[1:], "suites": payloads},
+                      f, indent=1, sort_keys=True)
+        print(f"json written to {args.out_json}", file=sys.stderr)
     if failures:
         sys.exit(1)
 

@@ -6,12 +6,13 @@ from . import (
     encoding,
     expansion,
     oracle,
+    planner,
     transitions,
     tzp,
 )
 from .api import DiscoveryResult, discover, discover_sequential
 from .backends import available_backends, get_backend, register_backend
-from .executor import MiningExecutor, ZoneChunkError
+from .executor import MiningExecutor, ZoneChunkError, ZoneOverflowError
 from .streaming import StreamingMiner
 from .temporal_graph import TemporalGraph, from_edges
 
@@ -21,6 +22,7 @@ __all__ = [
     "StreamingMiner",
     "TemporalGraph",
     "ZoneChunkError",
+    "ZoneOverflowError",
     "aggregation",
     "available_backends",
     "backends",
@@ -31,6 +33,7 @@ __all__ = [
     "from_edges",
     "get_backend",
     "oracle",
+    "planner",
     "register_backend",
     "transitions",
     "tzp",

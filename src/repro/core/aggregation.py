@@ -37,6 +37,15 @@ class CodeCounts(NamedTuple):
     unique_mask: jax.Array
 
 
+def empty_counts(capacity: int, limbs: int) -> CodeCounts:
+    """An all-padding count table (the identity element of merging)."""
+    return CodeCounts(
+        codes=jnp.zeros((capacity, limbs), jnp.int32),
+        counts=jnp.zeros((capacity,), jnp.int32),
+        unique_mask=jnp.zeros((capacity,), bool),
+    )
+
+
 @jax.jit
 def count_codes(codes, weights) -> CodeCounts:
     """Signed counting of code rows.
@@ -46,6 +55,8 @@ def count_codes(codes, weights) -> CodeCounts:
       weights: int32[N] signed weights (0 for padding).
     """
     n, limbs = codes.shape
+    if n == 0:
+        return empty_counts(0, limbs)
     operands = tuple(codes[:, i] for i in range(limbs)) + (weights,)
     sorted_ops = jax.lax.sort(operands, num_keys=limbs)
     sorted_codes = jnp.stack(sorted_ops[:limbs], axis=1)
@@ -94,3 +105,52 @@ def merge_counts(a: CodeCounts, b: CodeCounts) -> CodeCounts:
         jnp.where(b.unique_mask, b.counts, 0),
     ])
     return count_codes(codes, counts)
+
+
+def live_rows(c: CodeCounts):
+    """(codes, counts) with dead rows zeroed.
+
+    A row is live when it is a unique code whose signed count has not fully
+    cancelled.  Cancelled rows (count 0) are semantically absent but still
+    occupy table slots after :func:`count_codes`; zeroing their codes lets
+    the next merge reclaim the capacity — they collapse into the all-zero
+    padding group instead of holding a bounded-width carry slot forever.
+    """
+    live = c.unique_mask & (c.counts != 0)
+    return jnp.where(live[:, None], c.codes, 0), jnp.where(live, c.counts, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("cap",))
+def merge_bounded(a: CodeCounts, b: CodeCounts, *, cap: int):
+    """Merge ``b`` into ``a``, bounding the result to ``cap`` rows.
+
+    The carry primitive of hierarchical aggregation: fold partial per-chunk
+    count tables through a fixed-capacity table so the merge tree has
+    bounded width (peak memory O(cap + len(b)) instead of O(total
+    candidates)).  Unique codes compact to the front sorted, so truncating
+    to ``cap`` rows is exact whenever the live-unique population fits.
+
+    Returns ``(merged, spilled)`` where ``spilled`` is the number of live
+    unique codes that did NOT fit in ``cap`` rows.  ``spilled > 0`` means
+    the result is inexact and the caller must re-run with a larger cap
+    (the executor's spill policy doubles ``merge_cap`` and retries — exact
+    overflow detection makes the retry loop lossless).
+    """
+    a_codes, a_counts = live_rows(a)
+    b_codes, b_counts = live_rows(b)
+    merged = count_codes(jnp.concatenate([a_codes, b_codes]),
+                         jnp.concatenate([a_counts, b_counts]))
+    live = merged.unique_mask & (merged.counts != 0)
+    spilled = live[cap:].sum(dtype=jnp.int32)
+    total = merged.counts.shape[0]
+    if total >= cap:
+        out = CodeCounts(codes=merged.codes[:cap], counts=merged.counts[:cap],
+                         unique_mask=merged.unique_mask[:cap])
+    else:
+        pad = cap - total
+        out = CodeCounts(
+            codes=jnp.pad(merged.codes, ((0, pad), (0, 0))),
+            counts=jnp.pad(merged.counts, (0, pad)),
+            unique_mask=jnp.pad(merged.unique_mask, (0, pad)),
+        )
+    return out, spilled

@@ -65,6 +65,10 @@ def discover(
     e_cap: int | None = None,
     backend: str = "ref",
     zone_chunk: int | None = None,
+    agg: str = "auto",
+    merge_cap: int | None = None,
+    memory_budget_mb: float | None = None,
+    allow_overflow: bool = False,
     mesh: jax.sharding.Mesh | None = None,
     zone_axes: tuple[str, ...] | None = None,
 ) -> DiscoveryResult:
@@ -78,11 +82,21 @@ def discover(
       backend: any registered zone-scan backend ("ref", "pallas", "numpy");
         see :func:`repro.core.backends.available_backends`.
       zone_chunk: process zones in chunks of this many to bound memory.
+      agg: Phase-2 aggregation mode ("auto" | "legacy" | "hierarchical" |
+        "pipelined") — see :class:`repro.core.executor.MiningExecutor`.
+      merge_cap: hierarchical bounded-merge carry width (None = derived).
+      memory_budget_mb: derive ``zone_chunk``/``merge_cap`` from a device
+        memory budget (:mod:`repro.core.planner`) when ``zone_chunk`` is
+        not given explicitly.
+      allow_overflow: mine even if the zone batch dropped edges beyond
+        ``e_cap`` (the counts then undercount); default is to raise
+        :class:`repro.core.executor.ZoneOverflowError`.
       mesh/zone_axes: optional mesh to shard the zone axis over (data
         parallelism across devices — the paper's thread pool).
     """
     executor = MiningExecutor(
-        delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk
+        delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk,
+        agg=agg, merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
     )
     plan = tzp.plan_zones(graph, delta=delta, l_max=l_max, omega=omega,
                           e_cap=e_cap)
@@ -98,11 +112,13 @@ def discover(
     if mesh is not None:
         from repro.distributed import mining as dist_mining
 
+        MiningExecutor.check_batch_overflow(batch,
+                                            allow_overflow=allow_overflow)
         counts = dist_mining.mine_on_mesh(
             batch, mesh, axes, executor=executor,
         )
     else:
-        counts = executor.run(batch)
+        counts = executor.run(batch, allow_overflow=allow_overflow)
 
     return counts_to_result(
         counts, n_zones=plan.n_zones, e_cap=batch.e_cap,

@@ -13,6 +13,12 @@ metadata the executor needs to drive it correctly:
 * ``block_defaults`` — kernel tile sizes (e.g. Pallas ``c_blk``/``e_blk``)
   owned by the backend, not by call sites.
 * ``default_zone_chunk`` / ``max_recommended_e_cap`` — scheduling hints.
+* ``mem_model`` / ``default_merge_cap`` — memory hints for the capacity
+  planner (:mod:`repro.core.planner`): ``mem_model(e_cap, l_max)`` is the
+  backend's per-zone scan footprint in bytes (the Pallas kernel pads the
+  edge axis up to block multiples, so its zones cost more than the
+  reference model says), and ``default_merge_cap`` bounds the hierarchical
+  aggregation carry when the executor is not given an explicit cap.
 
 Backends self-describe; the executor, the distributed mining step, and the
 CLI all resolve scans through :func:`get_backend` instead of hand-rolled
@@ -51,6 +57,8 @@ class BackendSpec:
     block_defaults: dict | None = None
     default_zone_chunk: int | None = None
     max_recommended_e_cap: int | None = None
+    mem_model: Callable[[int, int], int] | None = None
+    default_merge_cap: int | None = None
     _scan: Callable | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
@@ -75,6 +83,8 @@ def register_backend(
     block_defaults: dict | None = None,
     default_zone_chunk: int | None = None,
     max_recommended_e_cap: int | None = None,
+    mem_model: Callable[[int, int], int] | None = None,
+    default_merge_cap: int | None = None,
     overwrite: bool = False,
 ) -> BackendSpec:
     """Publish a zone-scan backend under ``name``.
@@ -90,6 +100,7 @@ def register_backend(
         description=description, block_defaults=block_defaults,
         default_zone_chunk=default_zone_chunk,
         max_recommended_e_cap=max_recommended_e_cap,
+        mem_model=mem_model, default_merge_cap=default_merge_cap,
     )
     _REGISTRY[name] = spec
     return spec
@@ -139,10 +150,23 @@ def _load_numpy():
     return scan_numpy.scan_zones
 
 
+def _ref_mem_model(e_cap: int, l_max: int) -> int:
+    from repro.core import planner
+
+    return planner.ref_zone_bytes(e_cap, l_max)
+
+
+def _pallas_mem_model(e_cap: int, l_max: int) -> int:
+    from repro.core import planner
+
+    return planner.pallas_zone_bytes(e_cap, l_max, **PALLAS_BLOCK_DEFAULTS)
+
+
 register_backend(
     "ref", _load_ref,
     jittable=True, grade="reference",
     description="vectorized jnp lax.scan expansion (exact, any device)",
+    mem_model=_ref_mem_model,
 )
 
 register_backend(
@@ -150,6 +174,7 @@ register_backend(
     jittable=True, grade="accelerator",
     description="Pallas TPU kernel with live-window block skipping",
     block_defaults=PALLAS_BLOCK_DEFAULTS,
+    mem_model=_pallas_mem_model,
 )
 
 register_backend(
@@ -157,4 +182,6 @@ register_backend(
     jittable=False, grade="oracle",
     description="pure-NumPy brute-force walk (ground truth, small inputs)",
     max_recommended_e_cap=4096,
+    mem_model=_ref_mem_model,
+    default_merge_cap=4096,
 )

@@ -6,37 +6,82 @@ Every discovery entry point (batch ``discover``, the sequential baseline,
 
 * backend dispatch goes through :mod:`repro.core.backends` (capability-aware,
   pluggable);
-* zone chunking (``lax.map`` over zone sub-batches to bound peak memory) is
+* zone chunking (chunks of ``zone_chunk`` zones to bound peak memory) is
   implemented once, with an explicit policy for zone counts that do not
   divide ``zone_chunk`` — **pad** (default: append inert zero-sign rows) or
   **raise** — never the silent remainder drop the pre-refactor
   ``_mine_batch`` had;
-* jit compilation is cached per ``(backend, delta, l_max, zone_chunk, batch
-  shape)`` via a single module-level jitted function, shared by every
-  executor instance;
-* host-only backends (``jittable=False``, e.g. the NumPy oracle) run their
-  scan outside the jit boundary and only the signed aggregation is jitted.
+* Phase-2 aggregation has three modes (``agg``):
 
-``scan_aggregate`` is the traceable core (usable inside ``shard_map``);
-``run`` is the host-level entry that applies batching policy first.
+  - ``"legacy"``      — materialize every chunk's candidate codes, then one
+                        whole-batch flatten-and-sort (peak O(Z*C));
+  - ``"hierarchical"``— fold each chunk through ``count_codes`` immediately
+                        and tree-merge the partial tables inside the
+                        ``lax.scan`` carry via
+                        :func:`repro.core.aggregation.merge_bounded` — a
+                        bounded-width merge whose capacity is ``merge_cap``.
+                        Peak memory is O(zone_chunk*C + merge_cap),
+                        independent of the zone count.  Spills (more live
+                        unique codes than ``merge_cap``) are detected
+                        exactly and retried host-side with a doubled cap,
+                        so results are always exact;
+  - ``"pipelined"``   — same fold, driven by a host loop that double-buffers
+                        chunk dispatch: the next zone-chunk's host->device
+                        transfer is issued while the current chunk computes,
+                        and the carry buffers are donated to the jitted step
+                        so XLA reuses them in place.
+  - ``"auto"`` (default) resolves to ``"hierarchical"`` when chunking is
+    active and ``"legacy"`` otherwise (identical numerics either way —
+    enforced by ``tests/test_differential.py``);
+
+* ``zone_chunk`` itself no longer has to be a hardcoded hint: pass
+  ``memory_budget_mb`` and the executor derives the chunk (and
+  ``merge_cap``) from the backend's memory model via
+  :mod:`repro.core.planner`;
+* jit compilation is cached per ``(backend, delta, l_max, zone_chunk,
+  merge_cap, batch shape)`` via module-level jitted functions shared by
+  every executor instance;
+* host-only backends (``jittable=False``, e.g. the NumPy oracle) run their
+  scan outside the jit boundary and only the signed aggregation is jitted —
+  including a chunked host loop so even the oracle honors the hierarchical
+  memory bound.
+
+``scan_aggregate``/``scan_aggregate_partial`` are the traceable cores
+(usable inside ``shard_map``); ``run`` is the host-level entry that applies
+batching policy first and refuses to mis-report overflowed (edge-dropping)
+zone batches as exact counts.
 """
 
 from __future__ import annotations
 
 import functools
+import warnings
 
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 
-from . import aggregation, backends
+from . import aggregation, backends, encoding, planner
 from .aggregation import CodeCounts
 from .tzp import ZoneBatch
+
+AGG_MODES = ("auto", "legacy", "hierarchical", "pipelined")
 
 
 class ZoneChunkError(ValueError):
     """Zone count does not divide ``zone_chunk`` under pad_policy='raise'."""
+
+
+class ZoneOverflowError(RuntimeError):
+    """The zone batch dropped edges (``ZoneBatch.overflow > 0``).
+
+    Counts mined from such a batch undercount silently; the executor
+    refuses to run unless the caller opts in with ``allow_overflow=True``
+    (which still warns).  Raise-by-default is the regression guard for the
+    bug where ``build_zone_batch`` tallied dropped edges but every consumer
+    ignored the tally.
+    """
 
 
 def _chunked_scan(scan, u, v, t, valid, *, delta, l_max, zone_chunk):
@@ -53,13 +98,7 @@ def _chunked_scan(scan, u, v, t, valid, *, delta, l_max, zone_chunk):
 
     z = u.shape[0]
     if zone_chunk and zone_chunk < z:
-        if z % zone_chunk != 0:
-            raise ZoneChunkError(
-                f"zone count {z} is not divisible by zone_chunk "
-                f"{zone_chunk}; pad the batch (pad_policy='pad') or pick a "
-                f"divisor — remainder zones would otherwise be dropped"
-            )
-        nchunk = z // zone_chunk
+        nchunk = _n_chunks(z, zone_chunk)
         reshape = lambda x: x.reshape(nchunk, zone_chunk, *x.shape[1:])
         codes, lengths = jax.lax.map(
             chunk_fn, (reshape(u), reshape(v), reshape(t), reshape(valid))
@@ -71,11 +110,54 @@ def _chunked_scan(scan, u, v, t, valid, *, delta, l_max, zone_chunk):
     return codes, lengths
 
 
+def _n_chunks(z: int, zone_chunk: int) -> int:
+    if z % zone_chunk != 0:
+        raise ZoneChunkError(
+            f"zone count {z} is not divisible by zone_chunk "
+            f"{zone_chunk}; pad the batch (pad_policy='pad') or pick a "
+            f"divisor — remainder zones would otherwise be dropped"
+        )
+    return z // zone_chunk
+
+
+def _hier_fold(scan, u, v, t, valid, signs, *, delta, l_max, zone_chunk,
+               merge_cap):
+    """Hierarchical streaming aggregation (traceable).
+
+    Each zone-chunk is scanned and immediately signed-counted
+    (``aggregate_zones``); the partial tables fold through a bounded-width
+    carry (``merge_bounded``) inside ``lax.scan``, so at no point do all
+    Z*C candidate codes coexist.  Returns ``(CodeCounts[merge_cap],
+    spilled)`` — ``spilled > 0`` means ``merge_cap`` was too small and the
+    result is inexact (the host retries with a doubled cap).
+    """
+    z = u.shape[0]
+    zc = zone_chunk if (zone_chunk and zone_chunk < z) else z
+    nchunk = _n_chunks(z, zc)
+    limbs = encoding.n_limbs(l_max)
+    reshape = lambda x: x.reshape(nchunk, zc, *x.shape[1:])
+    xs = (reshape(u), reshape(v), reshape(t), reshape(valid),
+          signs.reshape(nchunk, zc))
+
+    def body(carry, chunk):
+        counts, spilled = carry
+        cu, cv, ct, cvalid, csigns = chunk
+        res = scan(cu, cv, ct, cvalid, delta=delta, l_max=l_max)
+        part = aggregation.aggregate_zones(res.code, res.length, csigns)
+        merged, spill = aggregation.merge_bounded(counts, part,
+                                                 cap=merge_cap)
+        return (merged, spilled + spill), None
+
+    init = (aggregation.empty_counts(merge_cap, limbs), jnp.int32(0))
+    (counts, spilled), _ = jax.lax.scan(body, init, xs)
+    return counts, spilled
+
+
 @functools.partial(
     jax.jit, static_argnames=("delta", "l_max", "scan", "zone_chunk")
 )
 def _mine_jit(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk):
-    """Jitted zone sweep + signed aggregation (shared compile cache).
+    """Jitted legacy path: full zone sweep, then one whole-batch aggregation.
 
     jax.jit keys its cache on the static args plus input shapes, so every
     executor instance with the same (scan fn, delta, l_max, zone_chunk,
@@ -89,6 +171,46 @@ def _mine_jit(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk):
     return aggregation.aggregate_zones(codes, lengths, signs)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("delta", "l_max", "scan", "zone_chunk", "merge_cap"),
+)
+def _mine_jit_hier(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk,
+                   merge_cap):
+    """Jitted hierarchical fold (shared compile cache, as ``_mine_jit``)."""
+    return _hier_fold(scan, u, v, t, valid, signs, delta=delta, l_max=l_max,
+                      zone_chunk=zone_chunk, merge_cap=merge_cap)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("delta", "l_max", "scan", "merge_cap"),
+    donate_argnums=(0, 1),
+)
+def _pipeline_step(carry, spilled, u, v, t, valid, signs, *, delta, l_max,
+                   scan, merge_cap):
+    """One pipelined chunk: scan + partial count + bounded merge.
+
+    The carry (and spill counter) are donated — XLA reuses their buffers in
+    place, so the resident aggregation state stays a single ``merge_cap``
+    table no matter how many chunks stream through.
+    """
+    res = scan(u, v, t, valid, delta=delta, l_max=l_max)
+    part = aggregation.aggregate_zones(res.code, res.length, signs)
+    merged, spill = aggregation.merge_bounded(carry, part, cap=merge_cap)
+    return merged, spilled + spill
+
+
+@functools.partial(
+    jax.jit, static_argnames=("merge_cap",), donate_argnums=(0, 1)
+)
+def _merge_chunk_jit(carry, spilled, codes, lengths, signs, *, merge_cap):
+    """Bounded merge of one host-scanned chunk (host-only backends)."""
+    part = aggregation.aggregate_zones(codes, lengths, signs)
+    merged, spill = aggregation.merge_bounded(carry, part, cap=merge_cap)
+    return merged, spilled + spill
+
+
 class MiningExecutor:
     """Chunked scan+aggregate engine over padded zone batches.
 
@@ -99,6 +221,14 @@ class MiningExecutor:
         (None/0 = whole batch at once); defaults to the backend's hint.
       pad_policy: "pad" appends inert zero-sign zone rows when the zone
         count does not divide ``zone_chunk``; "raise" errors instead.
+      agg: Phase-2 aggregation mode — "auto", "legacy", "hierarchical" or
+        "pipelined" (see module docstring).
+      merge_cap: bounded-merge carry width for the hierarchical modes
+        (None = backend hint, else one chunk's candidate rows).  Spills
+        are detected exactly and retried with a doubled cap.
+      memory_budget_mb: derive ``zone_chunk``/``merge_cap`` from this
+        device-memory budget via :mod:`repro.core.planner` whenever
+        ``zone_chunk`` was not given explicitly.
     """
 
     def __init__(
@@ -109,9 +239,14 @@ class MiningExecutor:
         backend: str = "ref",
         zone_chunk: int | None = None,
         pad_policy: str = "pad",
+        agg: str = "auto",
+        merge_cap: int | None = None,
+        memory_budget_mb: float | None = None,
     ):
         if pad_policy not in ("pad", "raise"):
             raise ValueError(f"unknown pad_policy {pad_policy!r}")
+        if agg not in AGG_MODES:
+            raise ValueError(f"unknown agg mode {agg!r}; one of {AGG_MODES}")
         self.delta = int(delta)
         self.l_max = int(l_max)
         self.spec = backends.get_backend(backend)
@@ -119,35 +254,126 @@ class MiningExecutor:
             zone_chunk = self.spec.default_zone_chunk
         self.zone_chunk = int(zone_chunk or 0)
         self.pad_policy = pad_policy
+        self.agg = agg
+        self.merge_cap = int(merge_cap) if merge_cap else None
+        self.memory_budget_mb = memory_budget_mb
 
     @property
     def backend(self) -> str:
         return self.spec.name
 
-    # -- traceable core (used inside shard_map by distributed mining) -------
+    # -- capacity resolution ------------------------------------------------
 
-    def scan_aggregate(self, u, v, t, valid, signs) -> CodeCounts:
-        """Scan + signed-aggregate a [Z, E] batch; JAX-traceable.
+    def capacity_plan(self, n_zones: int, e_cap: int):
+        """Budget-derived :class:`~repro.core.planner.CapacityPlan`, or
+        None when no ``memory_budget_mb`` was configured."""
+        if self.memory_budget_mb is None:
+            return None
+        return planner.plan_capacity(
+            n_zones=n_zones, e_cap=e_cap, l_max=self.l_max,
+            memory_budget_mb=self.memory_budget_mb,
+            mem_model=self.spec.mem_model, merge_cap=self.merge_cap,
+        )
 
-        Raises :class:`ZoneChunkError` at trace time when the (static) zone
-        count does not divide ``zone_chunk`` — inside a trace there is no
-        host to pad, so the remainder cannot be silently handled.
-        """
+    def _zone_chunk_for(self, z: int, e: int) -> int:
+        if self.zone_chunk:
+            return self.zone_chunk
+        plan = self.capacity_plan(z, e)
+        if plan is None:
+            return 0
+        return plan.zone_chunk if plan.zone_chunk < z else 0
+
+    def _merge_cap_for(self, zc: int, z: int, e: int) -> int:
+        if self.merge_cap:
+            return self.merge_cap
+        if self.spec.default_merge_cap:
+            return self.spec.default_merge_cap
+        return planner.default_merge_cap(zc or z, e)
+
+    def _agg_mode_for(self, zc: int, z: int) -> str:
+        if self.agg != "auto":
+            return self.agg
+        return "hierarchical" if zc and zc < z else "legacy"
+
+    # -- traceable cores (used inside shard_map by distributed mining) ------
+
+    def _require_jittable(self):
         if not self.spec.jittable:
             raise ValueError(
                 f"backend {self.backend!r} is host-only (jittable=False) "
                 f"and cannot run inside a traced/sharded computation"
             )
+
+    def scan_aggregate(self, u, v, t, valid, signs) -> CodeCounts:
+        """Scan + whole-batch signed-aggregate a [Z, E] batch; traceable.
+
+        Always the legacy (lossless-by-construction) aggregation: inside a
+        trace there is no host to run the merge-cap spill/retry policy, so
+        callers that want the hierarchical fold must use
+        :meth:`scan_aggregate_partial` and surface the spill count
+        themselves.  Raises :class:`ZoneChunkError` at trace time when the
+        (static) zone count does not divide ``zone_chunk``.
+        """
+        self._require_jittable()
         codes, lengths = _chunked_scan(
             self.spec.scan, u, v, t, valid,
             delta=self.delta, l_max=self.l_max, zone_chunk=self.zone_chunk,
         )
         return aggregation.aggregate_zones(codes, lengths, signs)
 
+    def scan_aggregate_partial(self, u, v, t, valid, signs):
+        """Traceable scan+aggregate honoring the executor's ``agg`` mode.
+
+        Returns ``(CodeCounts, spilled)``.  ``spilled`` is a traced int32:
+        0 whenever the result is exact; positive means the hierarchical
+        carry overflowed ``merge_cap`` and the caller (e.g. the mesh mining
+        step) must surface it — typically via a ``psum`` — so the host can
+        re-run with a larger cap instead of silently undercounting.
+        """
+        self._require_jittable()
+        z, e = u.shape
+        zc = self._zone_chunk_for(z, e)
+        if self._agg_mode_for(zc, z) == "legacy":
+            return self.scan_aggregate(u, v, t, valid, signs), jnp.int32(0)
+        return _hier_fold(
+            self.spec.scan, u, v, t, valid, signs,
+            delta=self.delta, l_max=self.l_max, zone_chunk=zc,
+            merge_cap=self._merge_cap_for(zc, z, e),
+        )
+
     # -- host-level entry points -------------------------------------------
 
-    def run(self, batch: ZoneBatch) -> CodeCounts:
-        """Mine a host-built :class:`ZoneBatch` to signed code counts."""
+    @staticmethod
+    def check_batch_overflow(batch: ZoneBatch, *,
+                             allow_overflow: bool = False) -> None:
+        """Enforce the overflow policy on a host-built batch.
+
+        Raises :class:`ZoneOverflowError` when the batch dropped edges
+        (``batch.overflow > 0``) — such counts undercount and must not
+        masquerade as exact.  ``allow_overflow=True`` downgrades the error
+        to a warning for callers that knowingly mine a truncated batch.
+        The single copy of the policy: ``run`` and the mesh path
+        (``api.discover`` before ``mine_on_mesh``) both call it.
+        """
+        if not batch.overflow:
+            return
+        msg = (f"zone batch dropped {batch.overflow} edge(s) that "
+               f"exceeded e_cap={batch.e_cap}; counts would silently "
+               f"undercount (raise e_cap, or shrink zones by planning "
+               f"with e_cap / a memory budget)")
+        if not allow_overflow:
+            raise ZoneOverflowError(msg)
+        warnings.warn(msg + " — continuing because allow_overflow=True",
+                      RuntimeWarning, stacklevel=3)
+
+    def run(self, batch: ZoneBatch, *, allow_overflow: bool = False
+            ) -> CodeCounts:
+        """Mine a host-built :class:`ZoneBatch` to signed code counts.
+
+        Applies :meth:`check_batch_overflow` first — overflowed batches
+        raise unless ``allow_overflow=True``.
+        """
+        self.check_batch_overflow(batch, allow_overflow=allow_overflow)
         return self.run_arrays(batch.u, batch.v, batch.t, batch.valid,
                                batch.sign)
 
@@ -155,8 +381,8 @@ class MiningExecutor:
         """Mine raw [Z, E] zone arrays (+ [Z] signs) to signed code counts."""
         u, v, t, valid, signs = (np.asarray(x)
                                  for x in (u, v, t, valid, signs))
-        z = u.shape[0]
-        zc = self.zone_chunk
+        z, e = u.shape
+        zc = self._zone_chunk_for(z, e)
         if zc and zc < z and z % zc != 0:
             if self.pad_policy == "raise":
                 raise ZoneChunkError(
@@ -168,7 +394,14 @@ class MiningExecutor:
                 [x, np.zeros((pad, *x.shape[1:]), x.dtype)])
             u, v, t, valid = map(pad_rows, (u, v, t, valid))
             signs = np.concatenate([signs, np.zeros(pad, signs.dtype)])
+            z += pad
 
+        mode = self._agg_mode_for(zc, z)
+        if mode == "legacy":
+            return self._run_legacy(u, v, t, valid, signs, zc)
+        return self._run_bounded(u, v, t, valid, signs, zc, mode)
+
+    def _run_legacy(self, u, v, t, valid, signs, zc) -> CodeCounts:
         if not self.spec.jittable:
             res = self.spec.scan(u, v, t, valid,
                                  delta=self.delta, l_max=self.l_max)
@@ -180,5 +413,102 @@ class MiningExecutor:
             jnp.asarray(u), jnp.asarray(v), jnp.asarray(t),
             jnp.asarray(valid), jnp.asarray(signs),
             delta=self.delta, l_max=self.l_max, scan=self.spec.scan,
-            zone_chunk=self.zone_chunk,
+            zone_chunk=zc,
         )
+
+    def _run_bounded(self, u, v, t, valid, signs, zc, mode) -> CodeCounts:
+        """Hierarchical/pipelined fold with the merge-cap spill policy.
+
+        Spills are exact signals, so retrying with a doubled cap is
+        lossless; ``merge_cap >= z*e + 1`` can never spill (at most z*e
+        distinct live codes, plus one row for the all-zero padding group
+        that sorts ahead of them), so the loop terminates.
+        """
+        z, e = u.shape
+        cap_ceiling = z * e + 1
+        merge_cap = min(self._merge_cap_for(zc, z, e), cap_ceiling)
+        while True:
+            if not self.spec.jittable:
+                counts, spilled = self._fold_host_scan(
+                    u, v, t, valid, signs, zc, merge_cap)
+            elif mode == "pipelined":
+                counts, spilled = self._fold_pipelined(
+                    u, v, t, valid, signs, zc, merge_cap)
+            else:
+                counts, spilled = _mine_jit_hier(
+                    jnp.asarray(u), jnp.asarray(v), jnp.asarray(t),
+                    jnp.asarray(valid), jnp.asarray(signs),
+                    delta=self.delta, l_max=self.l_max, scan=self.spec.scan,
+                    zone_chunk=zc, merge_cap=merge_cap,
+                )
+            n_spilled = int(spilled)
+            if n_spilled == 0:
+                return counts
+            # cap+spilled approximates the live-code population (a code cut
+            # in several steps is counted per step, so it can only
+            # overshoot the next guess); exactness is re-checked each
+            # round, and the z*e+1 ceiling provably cannot spill
+            need = max(2 * merge_cap, merge_cap + n_spilled, 8)
+            new_cap = min(1 << (need - 1).bit_length(), cap_ceiling)
+            warnings.warn(
+                f"hierarchical merge spilled {n_spilled} unique code(s) at "
+                f"merge_cap={merge_cap}; retrying with merge_cap={new_cap}",
+                RuntimeWarning, stacklevel=3,
+            )
+            merge_cap = new_cap
+
+    def _fold_pipelined(self, u, v, t, valid, signs, zc, merge_cap):
+        """Host-driven double-buffered chunk pipeline.
+
+        Each jitted step is dispatched asynchronously; the *next* chunk's
+        host->device transfer (``jax.device_put``) is issued immediately
+        after, overlapping with the in-flight compute.  Carry buffers are
+        donated, so aggregation state never exceeds one ``merge_cap``
+        table.
+        """
+        z, e = u.shape
+        zc = zc if (zc and zc < z) else z
+        nchunk = _n_chunks(z, zc)
+        limbs = encoding.n_limbs(self.l_max)
+
+        def put(i):
+            sl = slice(i * zc, (i + 1) * zc)
+            return tuple(jax.device_put(x[sl])
+                         for x in (u, v, t, valid, signs))
+
+        carry = aggregation.empty_counts(merge_cap, limbs)
+        spilled = jnp.zeros((), jnp.int32)
+        nxt = put(0)
+        for i in range(nchunk):
+            cur = nxt
+            carry, spilled = _pipeline_step(
+                carry, spilled, *cur, delta=self.delta, l_max=self.l_max,
+                scan=self.spec.scan, merge_cap=merge_cap,
+            )
+            if i + 1 < nchunk:
+                nxt = put(i + 1)    # async H2D behind the running chunk
+        return carry, spilled
+
+    def _fold_host_scan(self, u, v, t, valid, signs, zc, merge_cap):
+        """Chunked fold for host-only backends (scan outside jit).
+
+        Even the NumPy oracle gets the hierarchical memory bound: only one
+        chunk's [zc, E, L] code block exists at a time, merged through the
+        same bounded carry as the device paths.
+        """
+        z, e = u.shape
+        zc = zc if (zc and zc < z) else z
+        nchunk = _n_chunks(z, zc)
+        limbs = encoding.n_limbs(self.l_max)
+        carry = aggregation.empty_counts(merge_cap, limbs)
+        spilled = jnp.zeros((), jnp.int32)
+        for i in range(nchunk):
+            sl = slice(i * zc, (i + 1) * zc)
+            res = self.spec.scan(u[sl], v[sl], t[sl], valid[sl],
+                                 delta=self.delta, l_max=self.l_max)
+            carry, spilled = _merge_chunk_jit(
+                carry, spilled, jnp.asarray(res.code),
+                jnp.asarray(res.length), jnp.asarray(signs[sl]),
+                merge_cap=merge_cap,
+            )
+        return carry, spilled

@@ -1,0 +1,187 @@
+"""Capacity planner — derive mining capacities from a device-memory budget.
+
+Hardcoded ``zone_chunk`` hints do not transfer between graphs: the right
+chunk size depends on the zone batch's edge capacity, on ``l_max`` (node
+table + code limbs scale with it), and on how much device memory the
+deployment actually has.  This module owns the arithmetic:
+
+* a per-zone **memory model** of the scan (inputs + expansion state +
+  outputs).  Backends can override it via ``BackendSpec.mem_model`` — the
+  Pallas kernel, for example, pads the edge axis up to block multiples;
+* peak-memory estimates for the **legacy** whole-batch aggregation
+  (O(Z*C*L): every zone's candidate codes are materialized, flattened and
+  sorted at once) and for the **hierarchical** chunked fold
+  (O(zone_chunk*C*L + merge_cap*L): one chunk of scan state plus one
+  bounded-width merge table, independent of Z);
+* :func:`plan_capacity`, which picks the largest power-of-two
+  ``zone_chunk`` (and matching ``merge_cap``) whose hierarchical peak fits
+  the budget, and :func:`suggest_e_cap` for sizing the zone capacity
+  itself.
+
+Estimates are analytic, not measured — they exist to pick sane shapes and
+to make the O(Z*C) -> O(zone_chunk*C) ceiling move auditable (see
+EXPERIMENTS.md and ``benchmarks/bench_perf_mining.py``), not to account
+for every XLA temporary.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from . import encoding
+
+# host->device inputs: u, v, t int32 + valid bool, per edge slot
+_INPUT_BYTES_PER_EDGE = 13
+# sort-based counting touches ~2 copies of the (code, count) row stream
+# (operand + sorted output) before the segment-sum
+_SORT_COPIES = 2
+
+
+def ref_zone_bytes(e_cap: int, l_max: int) -> int:
+    """Per-zone scan footprint of the vectorized reference backend.
+
+    inputs (u, v, t, valid) + ZoneState (length, last_t, n_nodes int32;
+    done bool; nodes int32[E, l_max+1]; code int32[E, L]) + ZoneResult
+    (code int32[E, L], length int32[E]).
+    """
+    limbs = encoding.n_limbs(l_max)
+    k = l_max + 1
+    state = 13 + 4 * k + 4 * limbs
+    out = 4 * limbs + 4
+    return e_cap * (_INPUT_BYTES_PER_EDGE + state + out)
+
+
+def pallas_zone_bytes(e_cap: int, l_max: int, *, c_blk: int = 512,
+                      e_blk: int = 256) -> int:
+    """Pallas kernel model: the edge axis pads up to the larger block."""
+    blk = max(c_blk, e_blk)
+    e_pad = -(-e_cap // blk) * blk
+    return ref_zone_bytes(e_pad, l_max)
+
+
+def count_table_bytes(rows: int, l_max: int) -> int:
+    """Footprint of one sorted count table of ``rows`` (code, count) rows."""
+    limbs = encoding.n_limbs(l_max)
+    return _SORT_COPIES * rows * 4 * (limbs + 1)
+
+
+def legacy_peak_bytes(n_zones: int, e_cap: int, l_max: int, *,
+                      zone_chunk: int = 0,
+                      mem_model: Callable[[int, int], int] | None = None,
+                      ) -> int:
+    """Peak estimate of whole-batch aggregation: O(Z*C) regardless of chunking.
+
+    Chunking the scan (``lax.map``) bounds the *scan state* to one chunk,
+    but the legacy path still materializes every zone's candidate codes
+    before the single flatten-and-sort — that [Z*C, L] stream is the term
+    the hierarchical fold removes.
+    """
+    model = mem_model or ref_zone_bytes
+    limbs = encoding.n_limbs(l_max)
+    chunk = min(zone_chunk, n_zones) if zone_chunk else n_zones
+    scan_state = chunk * model(e_cap, l_max)
+    all_codes = n_zones * e_cap * (4 * limbs + 4)
+    return scan_state + all_codes + count_table_bytes(n_zones * e_cap, l_max)
+
+
+def hierarchical_peak_bytes(zone_chunk: int, e_cap: int, l_max: int, *,
+                            merge_cap: int,
+                            mem_model: Callable[[int, int], int] | None = None,
+                            ) -> int:
+    """Peak estimate of the chunked fold: independent of the zone count."""
+    model = mem_model or ref_zone_bytes
+    scan_state = zone_chunk * model(e_cap, l_max)
+    merge_rows = merge_cap + zone_chunk * e_cap
+    limbs = encoding.n_limbs(l_max)
+    carry = merge_cap * 4 * (limbs + 1)
+    return scan_state + carry + count_table_bytes(merge_rows, l_max)
+
+
+def default_merge_cap(zone_chunk: int, e_cap: int) -> int:
+    """One chunk's candidate rows: the first chunk can never spill, and the
+    carry is no bigger than the partial table it merges with.  The 1024-row
+    floor (~a few tens of KB) absorbs small chunks whose live-unique
+    population exceeds one chunk's rows, avoiding spill-retry recompiles."""
+    return max(1024, zone_chunk * e_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Budget-derived mining capacities (all sizes in bytes)."""
+
+    zone_chunk: int
+    merge_cap: int
+    budget_bytes: int
+    per_zone_bytes: int
+    est_peak_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.est_peak_bytes <= self.budget_bytes
+
+
+def plan_capacity(
+    *,
+    n_zones: int,
+    e_cap: int,
+    l_max: int,
+    memory_budget_mb: float,
+    mem_model: Callable[[int, int], int] | None = None,
+    merge_cap: int | None = None,
+) -> CapacityPlan:
+    """Largest power-of-two ``zone_chunk`` whose hierarchical peak fits.
+
+    ``merge_cap`` defaults to one chunk's candidate rows and scales with
+    the chosen chunk.  The floor is ``zone_chunk=1``; a plan whose
+    ``fits`` is False means even one zone exceeds the budget (the caller
+    should shrink ``e_cap`` — see :func:`suggest_e_cap`).
+    """
+    if memory_budget_mb <= 0:
+        raise ValueError("memory_budget_mb must be > 0")
+    n_zones = max(int(n_zones), 1)
+    budget = int(memory_budget_mb * 2**20)
+
+    def peak(zc: int) -> int:
+        cap = merge_cap if merge_cap is not None else default_merge_cap(zc,
+                                                                        e_cap)
+        return hierarchical_peak_bytes(zc, e_cap, l_max, merge_cap=cap,
+                                       mem_model=mem_model)
+
+    zc = 1
+    while zc * 2 <= n_zones and peak(zc * 2) <= budget:
+        zc *= 2
+    cap = merge_cap if merge_cap is not None else default_merge_cap(zc, e_cap)
+    model = mem_model or ref_zone_bytes
+    return CapacityPlan(
+        zone_chunk=zc,
+        merge_cap=cap,
+        budget_bytes=budget,
+        per_zone_bytes=model(e_cap, l_max),
+        est_peak_bytes=peak(zc),
+    )
+
+
+def suggest_e_cap(
+    *,
+    l_max: int,
+    memory_budget_mb: float,
+    zone_chunk: int = 1,
+    mem_model: Callable[[int, int], int] | None = None,
+    pad_edges_to: int = 8,
+) -> int:
+    """Largest power-of-two zone edge capacity that fits the budget with
+    ``zone_chunk`` zones in flight (the planner's answer to "how dense a
+    zone can this device even hold?")."""
+    if memory_budget_mb <= 0:
+        raise ValueError("memory_budget_mb must be > 0")
+    budget = int(memory_budget_mb * 2**20)
+    e = pad_edges_to
+    while hierarchical_peak_bytes(
+            zone_chunk, e * 2, l_max,
+            merge_cap=default_merge_cap(zone_chunk, e * 2),
+            mem_model=mem_model) <= budget:
+        e *= 2
+        if e >= 1 << 24:        # 16M edges per zone: beyond any real batch
+            break
+    return e

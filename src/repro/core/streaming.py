@@ -81,6 +81,10 @@ class StreamingMiner:
       delta, l_max, omega, e_cap: paper parameters, as in ``discover``.
       backend: registered zone-scan backend name.
       zone_chunk: executor memory bound (chunked zone sweep).
+      agg / merge_cap / memory_budget_mb: Phase-2 aggregation mode, the
+        hierarchical bounded-merge carry width, and the device-memory
+        budget the executor derives chunking from — see
+        :class:`repro.core.executor.MiningExecutor`.
 
     Usage::
 
@@ -100,6 +104,9 @@ class StreamingMiner:
         e_cap: int | None = None,
         backend: str = "ref",
         zone_chunk: int | None = None,
+        agg: str = "auto",
+        merge_cap: int | None = None,
+        memory_budget_mb: float | None = None,
     ):
         if delta < 1 or l_max < 1:
             raise ValueError("delta and l_max must be >= 1")
@@ -112,7 +119,8 @@ class StreamingMiner:
         self.l_b = self.delta * self.l_max
         self.l_g = self.omega * self.l_b
         self.executor = MiningExecutor(
-            delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk
+            delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk,
+            agg=agg, merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
         )
 
         self._u = np.zeros(0, np.int32)     # sliding buffer: edges >= s
@@ -126,6 +134,15 @@ class StreamingMiner:
         self.n_zones_finalized = 0
         self._epoch = 0
         self._closed_sig: tuple = (None, 0)
+        # epoch-keyed cache of the open-tail mining result: (epoch,
+        # tail_counts, tail_zones, tail_cap).  snapshot() is a pure
+        # function of the closed prefix and the epoch bumps exactly when
+        # that prefix changes, so reuse is exact — the finalized partial
+        # counts in self._counts are never re-mined, and between
+        # finalizations the tail is not either.
+        self._tail_cache: tuple | None = None
+        self.tail_cache_hits = 0
+        self.tail_cache_misses = 0
 
     # -- stream state -------------------------------------------------------
 
@@ -259,41 +276,58 @@ class StreamingMiner:
 
         With ``final=True`` the stream is treated as ended and every
         buffered edge is mined (the result then equals batch ``discover``
-        over everything ingested).  ``snapshot`` never mutates state; it can
-        be called at any time, repeatedly.
+        over everything ingested).  ``snapshot`` never mutates miner state
+        (only the epoch-keyed tail cache); it can be called at any time,
+        repeatedly — repeated calls within one epoch reuse both the
+        finalized partial counts and the cached open-tail mine, so only the
+        first snapshot of an epoch pays for device work.
         """
         counts = dict(self._counts)
         n_zones = self.n_zones_finalized
-        tail_cap = 0
-        if self._t.size:
-            if final:
-                cut = int(self._t.size)
-            else:
-                cut = int(np.searchsorted(self._t, self.closed_time,
-                                          side="left"))
-            if cut > 0:
-                # rebase to the tail start: int32-safe, shift-invariant
-                tail = TemporalGraph(
-                    u=self._u[:cut], v=self._v[:cut],
-                    t=(self._t[:cut] - self._t[0]).astype(np.int32),
-                    n_nodes=int(max(self._u[:cut].max(initial=-1),
-                                    self._v[:cut].max(initial=-1)) + 1),
-                )
-                plan = tzp.plan_zones(
-                    tail, delta=self.delta, l_max=self.l_max,
-                    omega=self.omega, e_cap=self.e_cap,
-                )
-                batch = tzp.build_zone_batch(
-                    tail, plan,
-                    pad_zones_to=self.executor.zone_chunk or 1,
-                    pad_edges_to=64,
-                )
-                tail_counts = self.executor.run(batch)
-                _merge_into(
-                    counts, transitions.device_counts_to_dict(tail_counts))
-                n_zones += plan.n_zones
-                tail_cap = batch.e_cap
+        if not final and self._tail_cache is not None \
+                and self._tail_cache[0] == self._epoch:
+            self.tail_cache_hits += 1
+            _, tail_counts, tail_zones, tail_cap = self._tail_cache
+        else:
+            tail_counts, tail_zones, tail_cap = self._mine_tail(final)
+            if not final:
+                self.tail_cache_misses += 1
+                self._tail_cache = (self._epoch, tail_counts, tail_zones,
+                                    tail_cap)
+        _merge_into(counts, tail_counts)
         return DiscoveryResult(
-            counts=counts, n_zones=n_zones, e_cap=tail_cap, overflow=0,
-            delta=self.delta, l_max=self.l_max,
+            counts=counts, n_zones=n_zones + tail_zones, e_cap=tail_cap,
+            overflow=0, delta=self.delta, l_max=self.l_max,
         )
+
+    def _mine_tail(self, final: bool) -> tuple[dict[str, int], int, int]:
+        """Mine the not-yet-finalized tail of the closed prefix (or, with
+        ``final``, the whole buffer); returns (counts, n_zones, e_cap)."""
+        if self._t.size == 0:
+            return {}, 0, 0
+        if final:
+            cut = int(self._t.size)
+        else:
+            cut = int(np.searchsorted(self._t, self.closed_time,
+                                      side="left"))
+        if cut == 0:
+            return {}, 0, 0
+        # rebase to the tail start: int32-safe, shift-invariant
+        tail = TemporalGraph(
+            u=self._u[:cut], v=self._v[:cut],
+            t=(self._t[:cut] - self._t[0]).astype(np.int32),
+            n_nodes=int(max(self._u[:cut].max(initial=-1),
+                            self._v[:cut].max(initial=-1)) + 1),
+        )
+        plan = tzp.plan_zones(
+            tail, delta=self.delta, l_max=self.l_max,
+            omega=self.omega, e_cap=self.e_cap,
+        )
+        batch = tzp.build_zone_batch(
+            tail, plan,
+            pad_zones_to=self.executor.zone_chunk or 1,
+            pad_edges_to=64,
+        )
+        tail_counts = self.executor.run(batch)
+        return (transitions.device_counts_to_dict(tail_counts),
+                plan.n_zones, batch.e_cap)

@@ -1,19 +1,22 @@
 """Distributed PTMT: zones sharded over the mesh (the paper's thread pool).
 
 Per-device scan + signed aggregation is delegated to
-:class:`repro.core.executor.MiningExecutor` (``scan_aggregate`` is traceable
-and runs inside the ``shard_map`` body); this module owns only the
-collective merge.  Phase-2 aggregation becomes a **two-level merge**:
+:class:`repro.core.executor.MiningExecutor` (``scan_aggregate_partial`` is
+traceable and runs inside the ``shard_map`` body); this module owns only the
+collective merge.  Phase-2 aggregation becomes a **multi-level merge**:
 
-  1. every device signed-counts its own zones (`aggregate_zones`) — unique
-     codes compact to the front of the local table;
+  1. every device folds its own zones into a partial count table — when the
+     executor is chunked this is the hierarchical bounded-carry fold
+     (O(zone_chunk*C) peak instead of O(zones_local*C), see
+     ``core/executor.py``), never one whole-shard flatten;
   2. only the first ``out_cap`` rows (a configurable unique-code budget) are
      ``all_gather``-ed and merged, shrinking the collective payload from
      O(zones_local * e_cap) to O(out_cap) per device.
 
-Overflow of the unique-code budget is detected and surfaced (psum of a flag)
-rather than silently truncated.  This replaces the paper's atomic global hash
-merge with a deterministic, collective-friendly reduction.
+Overflow of either budget — the collective ``out_cap`` or the hierarchical
+``merge_cap`` carry — is detected and surfaced (psum of a flag) rather than
+silently truncated.  This replaces the paper's atomic global hash merge with
+a deterministic, collective-friendly reduction.
 """
 
 from __future__ import annotations
@@ -36,12 +39,15 @@ def _as_executor(
     l_max: int | None,
     backend: str,
     zone_chunk: int | None,
+    agg: str = "auto",
+    merge_cap: int | None = None,
 ) -> MiningExecutor:
     if executor is None:
         if delta is None or l_max is None:
             raise ValueError("pass either an executor or delta+l_max")
         executor = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
-                                  zone_chunk=zone_chunk)
+                                  zone_chunk=zone_chunk, agg=agg,
+                                  merge_cap=merge_cap)
     if not executor.spec.jittable:
         raise ValueError(
             f"backend {executor.backend!r} is host-only and cannot be "
@@ -59,6 +65,8 @@ def make_mine_fn(
     l_max: int | None = None,
     backend: str = "ref",
     zone_chunk: int = 0,
+    agg: str = "auto",
+    merge_cap: int | None = None,
     out_cap: int = 65536,
     merge_mode: str = "flat",
 ):
@@ -67,7 +75,10 @@ def make_mine_fn(
     Returns ``fn(u, v, t, valid, signs) -> (CodeCounts, overflow)`` where the
     zone axis (leading) is sharded over ``axes`` and the result is replicated.
     Pass a configured :class:`MiningExecutor` or the legacy
-    delta/l_max/backend/zone_chunk kwargs (an executor is built internally).
+    delta/l_max/backend/zone_chunk (+ agg/merge_cap) kwargs (an executor is
+    built internally).  With a chunked executor the per-shard aggregation is
+    the hierarchical bounded-carry fold; its merge-cap spills are folded
+    into the returned overflow flag.
 
     merge_mode:
       "flat"         — one all_gather over every axis, then a single merge
@@ -80,7 +91,8 @@ def make_mine_fn(
                        §Perf.
     """
     executor = _as_executor(executor, delta=delta, l_max=l_max,
-                            backend=backend, zone_chunk=zone_chunk)
+                            backend=backend, zone_chunk=zone_chunk,
+                            agg=agg, merge_cap=merge_cap)
     zone_spec = P(axes)
     scalar_spec = P(axes)
 
@@ -93,9 +105,10 @@ def make_mine_fn(
         return send_codes, send_counts, overflow
 
     def step(u, v, t, valid, signs):
-        local = executor.scan_aggregate(u, v, t, valid, signs)
+        local, merge_spill = executor.scan_aggregate_partial(
+            u, v, t, valid, signs)
         cap = min(out_cap, local.counts.shape[0])
-        overflow = jnp.int32(0)
+        overflow = merge_spill
         if merge_mode == "hierarchical":
             merged = local
             for axis in reversed(axes):      # innermost (fastest) first
@@ -137,12 +150,15 @@ def mine_on_mesh(
     l_max: int | None = None,
     backend: str = "ref",
     zone_chunk: int | None = None,
+    agg: str = "auto",
+    merge_cap: int | None = None,
     out_cap: int = 65536,
 ) -> CodeCounts:
     """Run distributed discovery over a host-built :class:`ZoneBatch`."""
     fn = make_mine_step(
         mesh, axes, executor=executor, delta=delta, l_max=l_max,
-        backend=backend, zone_chunk=zone_chunk or 0, out_cap=out_cap,
+        backend=backend, zone_chunk=zone_chunk or 0, agg=agg,
+        merge_cap=merge_cap, out_cap=out_cap,
     )
     counts, overflow = fn(
         jnp.asarray(batch.u), jnp.asarray(batch.v), jnp.asarray(batch.t),
@@ -150,8 +166,11 @@ def mine_on_mesh(
     )
     if int(overflow) > 0:
         raise RuntimeError(
-            f"{int(overflow)} device(s) overflowed the unique-code budget "
-            f"(out_cap={out_cap}); re-run with a larger out_cap"
+            f"unique-code budget overflow on the mesh (psum flag "
+            f"{int(overflow)}): either a device exceeded out_cap="
+            f"{out_cap} at the collective merge or its hierarchical "
+            f"merge_cap carry spilled; re-run with a larger out_cap / "
+            f"merge_cap"
         )
     return counts
 

@@ -11,6 +11,12 @@ through :class:`repro.core.StreamingMiner` (per-chunk latency + sustained
 edges/sec); combine with ``--check-sequential`` to verify the final
 snapshot against the sequential baseline.
 
+``--agg hierarchical|pipelined`` selects the bounded-memory Phase-2
+aggregation and ``--memory-budget-mb`` lets the capacity planner derive
+``zone_chunk``/``merge_cap`` from a device-memory budget; ``--allow-overflow``
+opts in to mining batches that dropped edges beyond ``e_cap`` (undercounts,
+refused by default).
+
 Batch and stream runs emit the **same** end-of-run summary, and
 ``--out-json FILE`` writes it with one schema for both modes (stream-only
 frontier stats live under a ``stream`` key that is ``null`` for batch
@@ -30,6 +36,7 @@ from repro.core import (
     discover,
     discover_sequential,
 )
+from repro.core import executor
 from repro.core.streaming import replay_stream
 from repro.data import synthetic_graphs
 
@@ -62,6 +69,9 @@ def _summary(args, graph, res, dt: float, mode: str,
         "l_max": args.l_max,
         "omega": args.omega,
         "e_cap": args.e_cap,
+        "agg": args.agg,
+        "merge_cap": args.merge_cap,
+        "memory_budget_mb": args.memory_budget_mb,
         "n_edges": graph.n_edges,
         "n_nodes": graph.n_nodes,
         "seconds": dt,
@@ -84,7 +94,8 @@ def _run_stream(args, graph):
         raise SystemExit("--chunk-edges must be >= 1")
     miner = StreamingMiner(
         delta=args.delta, l_max=args.l_max, omega=args.omega,
-        e_cap=args.e_cap, backend=args.backend,
+        e_cap=args.e_cap, backend=args.backend, agg=args.agg,
+        merge_cap=args.merge_cap, memory_budget_mb=args.memory_budget_mb,
     )
     chunk = args.chunk_edges
     latencies, dt = replay_stream(miner, graph, chunk)
@@ -121,6 +132,18 @@ def main():
     ap.add_argument("--l-max", type=int, default=6)
     ap.add_argument("--omega", type=int, default=20)
     ap.add_argument("--e-cap", type=int, default=None)
+    ap.add_argument("--agg", default="auto", choices=list(executor.AGG_MODES),
+                    help="Phase-2 aggregation: hierarchical/pipelined bound "
+                         "peak memory to O(zone_chunk) instead of O(zones)")
+    ap.add_argument("--merge-cap", type=int, default=None,
+                    help="hierarchical bounded-merge carry width (default: "
+                         "derived from zone_chunk)")
+    ap.add_argument("--memory-budget-mb", type=float, default=None,
+                    help="derive zone_chunk/merge_cap from this device "
+                         "memory budget (core.planner) instead of hints")
+    ap.add_argument("--allow-overflow", action="store_true",
+                    help="mine even if the zone batch dropped edges beyond "
+                         "e_cap (counts then undercount; default: error)")
     ap.add_argument("--backend", default="ref",
                     choices=list(available_backends()))
     ap.add_argument("--seed", type=int, default=0)
@@ -149,7 +172,10 @@ def main():
         t0 = time.perf_counter()
         res = discover(
             graph, delta=args.delta, l_max=args.l_max, omega=args.omega,
-            e_cap=args.e_cap, backend=args.backend,
+            e_cap=args.e_cap, backend=args.backend, agg=args.agg,
+            merge_cap=args.merge_cap,
+            memory_budget_mb=args.memory_budget_mb,
+            allow_overflow=args.allow_overflow,
         )
         dt = time.perf_counter() - t0
         stream_stats = None

@@ -159,7 +159,7 @@ def verify_against_batch(service, names, streams, *, delta, l_max, omega,
         prefix = TemporalGraph(u=g.u[:cut], v=g.v[:cut], t=g.t[:cut],
                                n_nodes=g.n_nodes)
         expect = discover(prefix, delta=delta, l_max=l_max, omega=omega,
-                          e_cap=e_cap, backend=backend)
+                          e_cap=e_cap, backend=backend, allow_overflow=True)
         rows.append({
             "tenant": name,
             "prefix_edges": prefix.n_edges,

@@ -47,6 +47,9 @@ class MotifSession:
         e_cap: int | None = None,
         backend: str = "ref",
         zone_chunk: int | None = None,
+        agg: str = "auto",
+        merge_cap: int | None = None,
+        memory_budget_mb: float | None = None,
         ingest_batch: int = 4096,
         cache_capacity: int = 2,
     ):
@@ -56,7 +59,8 @@ class MotifSession:
         self.ingest_batch = int(ingest_batch)
         self.miner = StreamingMiner(
             delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
-            backend=backend, zone_chunk=zone_chunk,
+            backend=backend, zone_chunk=zone_chunk, agg=agg,
+            merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
         )
         self.cache = EpochCache(cache_capacity)
         self.lock = threading.RLock()
@@ -182,4 +186,10 @@ class MotifSession:
                 "queries": self.queries,
                 "snapshots_mined": self.snapshots_mined,
                 "cache": self.cache.stats(),
+                # miner-level reuse of finalized partial counts + the
+                # open-tail mine (exact, epoch-keyed — even when this
+                # session's engine cache evicted the epoch, a re-snapshot
+                # within the same epoch does no device mining)
+                "tail_cache_hits": self.miner.tail_cache_hits,
+                "tail_cache_misses": self.miner.tail_cache_misses,
             }

@@ -1,10 +1,28 @@
 """Shared test helpers. NB: XLA_FLAGS device-count overrides are only ever
 set in subprocess tests — the main process must see 1 CPU device."""
 
+import os
+
 import numpy as np
 import pytest
 
 from repro.core.temporal_graph import TemporalGraph, from_edges
+
+try:        # hypothesis is optional for tier-1 (tests importorskip it)
+    from hypothesis import settings as _hyp_settings
+
+    # tier1 (default): small, derandomized — property tests ride along in
+    # the ordinary suite without bloating it.  fuzz: the dedicated CI
+    # differential-fuzz step (REPRO_HYPOTHESIS_PROFILE=fuzz) buys a wider
+    # search; seeds are pinned there via --hypothesis-seed.
+    _hyp_settings.register_profile("tier1", max_examples=10, deadline=None,
+                                   derandomize=True)
+    _hyp_settings.register_profile("fuzz", max_examples=50, deadline=None,
+                                   print_blob=True)
+    _hyp_settings.load_profile(
+        os.environ.get("REPRO_HYPOTHESIS_PROFILE", "tier1"))
+except ImportError:
+    pass
 
 
 def random_graph(seed: int, n_edges: int, n_nodes: int,

@@ -1,0 +1,292 @@
+"""Cross-backend differential harness for the full discovery path.
+
+Every graph here flows through the complete ``plan_zones ->
+build_zone_batch -> MiningExecutor.run`` pipeline for every backend
+(``ref`` jnp reference, ``numpy`` brute-force oracle, ``pallas`` kernel —
+interpret mode on CPU) and every aggregation configuration (chunked vs
+unchunked, legacy whole-batch vs hierarchical bounded-carry vs pipelined),
+and all results must agree code-for-code — with the standalone oracle as
+ground truth whenever the batch is exact (``overflow == 0``).
+
+Two layers:
+  * a deterministic corpus of adversarial regimes (bursty, repeated
+    timestamps, self-loop-heavy, adaptive ``e_cap``-shrunk zones) that runs
+    everywhere, hypothesis installed or not;
+  * Hypothesis property tests over generated temporal graphs — the CI
+    differential-fuzz step widens the search (profile "fuzz", pinned
+    seeds), while tier-1 runs a small derandomized sample (profile
+    "tier1", registered in conftest).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MiningExecutor, discover, oracle, transitions, tzp
+from repro.core.temporal_graph import from_edges
+from conftest import random_graph
+
+BACKENDS = ("ref", "numpy", "pallas")
+
+
+def _dict(counts):
+    return transitions.device_counts_to_dict(counts)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic adversarial corpus.
+# ---------------------------------------------------------------------------
+
+
+def _bursty(seed, n=160, nodes=7):
+    """Dense bursts separated by dead gaps (zone-boundary stress)."""
+    rng = np.random.default_rng(seed)
+    t, now = [], 0
+    while len(t) < n:
+        now += int(rng.integers(40, 120))
+        burst = int(rng.integers(3, 18))
+        t.extend((now + np.sort(rng.integers(0, 12, burst))).tolist())
+    t = np.asarray(t[:n])
+    return from_edges(rng.integers(0, nodes, n), rng.integers(0, nodes, n), t)
+
+
+def _repeated_ts(seed, n=140, nodes=6):
+    """Heavy timestamp ties (t > last_t gating, stable-sort order)."""
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.integers(0, n // 4, n))      # ~4 edges per timestamp
+    return from_edges(rng.integers(0, nodes, n), rng.integers(0, nodes, n), t)
+
+
+def _self_loops(seed, n=120, nodes=5):
+    """~1/3 self-loops (u == v: single-node seeding + same_uv relabeling)."""
+    rng = np.random.default_rng(seed)
+    u = rng.integers(0, nodes, n)
+    v = np.where(rng.random(n) < 0.35, u, rng.integers(0, nodes, n))
+    return from_edges(u, v, np.sort(rng.integers(0, 400, n)))
+
+
+CORPUS = [
+    ("bursty", _bursty, dict(delta=20, l_max=4, omega=2, e_cap=None)),
+    ("repeated-ts", _repeated_ts, dict(delta=6, l_max=3, omega=2,
+                                       e_cap=None)),
+    ("self-loops", _self_loops, dict(delta=30, l_max=4, omega=3,
+                                     e_cap=None)),
+    # adaptive zoning: e_cap forces the planner to shrink dense zones
+    ("adaptive-ecap", _bursty, dict(delta=15, l_max=3, omega=4, e_cap=24)),
+]
+
+
+@pytest.mark.parametrize("name,gen,params",
+                         CORPUS, ids=[c[0] for c in CORPUS])
+def test_full_path_backends_agree_on_corpus(name, gen, params):
+    g = gen(seed=11)
+    e_cap = params["e_cap"]
+    results = {}
+    for backend in BACKENDS:
+        res = discover(g, delta=params["delta"], l_max=params["l_max"],
+                       omega=params["omega"], e_cap=e_cap, backend=backend,
+                       allow_overflow=True)
+        results[backend] = res
+    base = results["ref"]
+    for backend in BACKENDS[1:]:
+        assert results[backend].counts == base.counts, \
+            f"{backend} != ref on {name}"
+    if base.overflow == 0:
+        expect = dict(oracle.count_codes(
+            g.u, g.v, g.t, params["delta"], params["l_max"]))
+        assert base.counts == expect, f"ref != oracle on {name}"
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("agg", ["legacy", "hierarchical", "pipelined"])
+def test_chunked_agg_modes_match_unchunked(backend, agg):
+    """Chunked x {legacy, hierarchical, pipelined} == one-shot whole batch,
+    for jittable and host-only backends alike."""
+    g = _bursty(seed=3, n=140)
+    delta, l_max = 20, 4
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    batch = tzp.build_zone_batch(g, plan, pad_zones_to=4)
+    base = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                          zone_chunk=0)
+    chunked = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                             zone_chunk=4, agg=agg)
+    assert _dict(chunked.run(batch)) == _dict(base.run(batch))
+
+
+def test_hierarchical_survives_tiny_merge_cap():
+    """The spill/retry policy must converge to exact counts from any cap."""
+    g = random_graph(9, 260, 9, 700)
+    delta, l_max = 25, 4
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    batch = tzp.build_zone_batch(g, plan, pad_zones_to=2)
+    base = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=0)
+    tiny = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2,
+                          agg="hierarchical", merge_cap=8)
+    with pytest.warns(RuntimeWarning, match="merge spilled"):
+        got = _dict(tiny.run(batch))
+    assert got == _dict(base.run(batch))
+
+
+def test_merge_cap_retry_terminates_at_full_saturation():
+    """Every candidate a distinct live code: the retry ceiling must leave
+    room for the all-zero padding row (z*e + 1), or the spill/retry loop
+    re-derives the same cap forever (regression: infinite hang)."""
+    # temporal path 0-1-2-...: each seed walk absorbs a unique node
+    # sequence, so all 8 candidates carry distinct codes
+    n = 8
+    g = from_edges(np.arange(n), np.arange(n) + 1,
+                   2 * np.arange(n))
+    delta, l_max = 5, 8
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    batch = tzp.build_zone_batch(g, plan)
+    ex = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=1,
+                        agg="hierarchical", merge_cap=8)
+    base = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=0)
+    with pytest.warns(RuntimeWarning, match="merge spilled"):
+        got = _dict(ex.run(batch))
+    assert got == _dict(base.run(batch))
+
+
+def test_mesh_hierarchical_matches_single_device():
+    """Per-shard hierarchical fold inside shard_map == plain discover."""
+    import jax
+
+    from repro.distributed import mining
+
+    g = _bursty(seed=7, n=120)
+    delta, l_max = 20, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    batch = tzp.build_zone_batch(g, plan, pad_zones_to=4)
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:1]), ("z",))
+    ex = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2,
+                        agg="hierarchical")
+    counts = mining.mine_on_mesh(batch, mesh, ("z",), executor=ex)
+    expect = discover(g, delta=delta, l_max=l_max, omega=2)
+    assert _dict(counts) == expect.counts
+
+
+# ---------------------------------------------------------------------------
+# Overflow must never masquerade as exact counts (regression).
+# ---------------------------------------------------------------------------
+
+
+def _overflowing_setup():
+    """A burst denser than e_cap inside the 2*L_b shrink floor: the adaptive
+    planner cannot split it further, so edges are genuinely dropped."""
+    delta, l_max = 10, 3
+    rng = np.random.default_rng(0)
+    n = 120
+    g = from_edges(rng.integers(0, 6, n), rng.integers(0, 6, n),
+                   np.sort(rng.integers(0, 2 * delta * l_max, n)))
+    return g, delta, l_max
+
+
+def test_executor_refuses_overflowed_batch():
+    g, delta, l_max = _overflowing_setup()
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2, e_cap=16)
+    batch = tzp.build_zone_batch(g, plan, e_cap=16)
+    assert batch.overflow > 0, "setup must actually drop edges"
+    ex = MiningExecutor(delta=delta, l_max=l_max)
+    from repro.core import ZoneOverflowError
+
+    with pytest.raises(ZoneOverflowError, match="dropped"):
+        ex.run(batch)
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        got = ex.run(batch, allow_overflow=True)
+    # and the opted-in run really does undercount vs the oracle
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    assert sum(_dict(got).values()) < sum(expect.values())
+
+
+def test_discover_refuses_overflow_and_allows_optin():
+    g, delta, l_max = _overflowing_setup()
+    from repro.core import ZoneOverflowError
+
+    with pytest.raises(ZoneOverflowError, match="dropped"):
+        discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16)
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        res = discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16,
+                       allow_overflow=True)
+    assert res.overflow > 0
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis fuzz layer (optional: the corpus above runs without it).
+# ---------------------------------------------------------------------------
+
+try:
+    import hypothesis as hyp
+    from hypothesis import strategies as st
+except ImportError:
+    hyp = None
+
+if hyp is not None:
+
+    @st.composite
+    def temporal_graphs(draw):
+        """Small adversarial temporal graphs: bursty gaps, timestamp ties
+        and self-loops all arise naturally from the ranges chosen here."""
+        n = draw(st.integers(1, 36))
+        nodes = draw(st.integers(1, 6))
+        u = draw(st.lists(st.integers(0, nodes - 1), min_size=n, max_size=n))
+        v = draw(st.lists(st.integers(0, nodes - 1), min_size=n, max_size=n))
+        gaps = draw(st.lists(st.integers(0, 9), min_size=n, max_size=n))
+        t = np.cumsum(np.asarray(gaps, np.int64))
+        return from_edges(np.asarray(u, np.int64), np.asarray(v, np.int64),
+                          t)
+
+    @hyp.given(
+        g=temporal_graphs(),
+        delta=st.integers(2, 8),
+        l_max=st.integers(2, 4),
+        omega=st.sampled_from([2, 3]),
+        e_cap=st.sampled_from([None, 8, 16]),
+    )
+    def test_fuzz_full_path_ref_vs_numpy_oracle(g, delta, l_max, omega,
+                                                e_cap):
+        """ref == numpy through the full path on generated graphs; both
+        equal the standalone oracle whenever no edges were dropped."""
+        kw = dict(delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
+                  allow_overflow=True)
+        a = discover(g, backend="ref", **kw)
+        b = discover(g, backend="numpy", **kw)
+        assert a.counts == b.counts
+        assert a.overflow == b.overflow
+        if a.overflow == 0:
+            expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+            assert a.counts == expect
+
+    @hyp.given(
+        g=temporal_graphs(),
+        delta=st.integers(2, 8),
+        l_max=st.integers(2, 4),
+        zone_chunk=st.sampled_from([2, 3, 4]),
+        agg=st.sampled_from(["hierarchical", "pipelined"]),
+    )
+    def test_fuzz_hierarchical_agg_matches_legacy(g, delta, l_max,
+                                                  zone_chunk, agg):
+        """Bounded-carry folds == legacy whole-batch flatten on any batch,
+        including zone counts the chunk size does not divide (pad
+        policy)."""
+        plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+        batch = tzp.build_zone_batch(g, plan)
+        legacy = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=0)
+        folded = MiningExecutor(delta=delta, l_max=l_max,
+                                zone_chunk=zone_chunk, agg=agg)
+        assert _dict(folded.run(batch)) == _dict(legacy.run(batch))
+
+    @hyp.given(
+        g=temporal_graphs(),
+        delta=st.integers(2, 6),
+        l_max=st.integers(2, 3),
+    )
+    @hyp.settings(max_examples=10)
+    def test_fuzz_pallas_interpret_matches_ref(g, delta, l_max):
+        """Pallas (interpret mode on CPU) == ref through the full path.
+
+        Kept to few examples: interpret mode executes the kernel grid in
+        Python.  The corpus test covers the adversarial regimes for pallas
+        deterministically.
+        """
+        a = discover(g, delta=delta, l_max=l_max, omega=2, backend="pallas")
+        b = discover(g, delta=delta, l_max=l_max, omega=2, backend="ref")
+        assert a.counts == b.counts

@@ -170,3 +170,72 @@ def test_mesh_requires_jittable_backend():
     with pytest.raises(ValueError, match="host-only"):
         mining.make_mine_fn(mesh, ("z",), delta=10, l_max=3,
                             backend="numpy")
+
+
+# ---------------------------------------------------------------------------
+# Capacity planner: budgets instead of hardcoded hints.
+# ---------------------------------------------------------------------------
+
+
+def test_plan_capacity_monotone_in_budget():
+    from repro.core import planner
+
+    caps = [
+        planner.plan_capacity(n_zones=4096, e_cap=1024, l_max=5,
+                              memory_budget_mb=mb).zone_chunk
+        for mb in (1, 16, 256, 4096)
+    ]
+    assert all(a <= b for a, b in zip(caps, caps[1:]))
+    assert caps[0] >= 1
+    assert all(c & (c - 1) == 0 for c in caps), "power-of-two chunks"
+
+
+def test_plan_capacity_peak_fits_budget():
+    from repro.core import planner
+
+    plan = planner.plan_capacity(n_zones=2048, e_cap=512, l_max=4,
+                                 memory_budget_mb=64)
+    assert plan.fits
+    assert plan.est_peak_bytes <= plan.budget_bytes
+    # hierarchical peak is Z-independent: same plan at 16x the zones
+    plan_big = planner.plan_capacity(n_zones=32768, e_cap=512, l_max=4,
+                                     memory_budget_mb=64)
+    assert plan_big.zone_chunk == plan.zone_chunk
+
+
+def test_pallas_mem_model_exceeds_ref():
+    """The Pallas kernel pads the edge axis to block multiples, so its
+    planner model must never undercount vs the reference model."""
+    from repro.core import planner
+
+    for e_cap in (8, 100, 512, 4096):
+        assert (planner.pallas_zone_bytes(e_cap, 5)
+                >= planner.ref_zone_bytes(e_cap, 5))
+
+
+def test_suggest_e_cap_power_of_two_and_budget_scaled():
+    from repro.core import planner
+
+    small = planner.suggest_e_cap(l_max=5, memory_budget_mb=4)
+    big = planner.suggest_e_cap(l_max=5, memory_budget_mb=512)
+    assert small & (small - 1) == 0
+    assert big > small
+
+
+def test_budget_derived_zone_chunk_is_exact():
+    """An executor given only a memory budget must still be exact, and must
+    actually chunk (derived zone_chunk smaller than the zone count)."""
+    g = random_graph(13, 400, 10, 1_000)
+    delta, l_max = 30, 4
+    plan, batch = _batch_for(g, delta=delta, l_max=l_max, omega=2,
+                             pad_zones_to=1)
+    ex = MiningExecutor(delta=delta, l_max=l_max, memory_budget_mb=0.75)
+    zc = ex._zone_chunk_for(batch.n_zones, batch.e_cap)
+    assert 0 < zc < batch.n_zones
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    assert _counts_dict(ex.run(batch)) == expect
+
+
+def test_executor_rejects_unknown_agg_mode():
+    with pytest.raises(ValueError, match="agg mode"):
+        MiningExecutor(delta=5, l_max=3, agg="no-such-mode")

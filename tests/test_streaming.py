@@ -130,6 +130,53 @@ def test_large_epoch_timestamps():
     assert final.counts == expect.counts
 
 
+def test_snapshot_reuses_tail_within_epoch():
+    """Repeated snapshots in one epoch reuse the cached open-tail mine
+    (exact, epoch-keyed); an epoch bump invalidates it."""
+    g = random_graph(6, 800, 10, 2_600)
+    delta, l_max, omega = 20, 4, 3
+    miner = StreamingMiner(delta=delta, l_max=l_max, omega=omega)
+    _feed(miner, g, 200)
+
+    first = miner.snapshot()
+    assert miner.tail_cache_misses == 1
+    again = miner.snapshot()
+    assert miner.tail_cache_hits == 1 and miner.tail_cache_misses == 1
+    assert again.counts == first.counts
+    assert again.n_zones == first.n_zones
+
+    # final=True must bypass the cache (different cut), not poison it
+    fin = miner.snapshot(final=True)
+    assert miner.tail_cache_misses == 1
+    expect_fin = discover(g, delta=delta, l_max=l_max, omega=omega)
+    assert fin.counts == expect_fin.counts
+
+    # an epoch-advancing ingest invalidates: next snapshot re-mines
+    epoch = miner.epoch
+    t0 = int(miner.t_head)          # == g.t[-1]: the stream is fully fed
+    i = 0
+    while miner.epoch == epoch:
+        i += 1
+        miner.ingest([0], [1], [t0 + 50 * i])
+    snap = miner.snapshot()
+    assert miner.tail_cache_misses == 2
+    expect = discover(_prefix_with_extra(g, miner, 50, i),
+                      delta=delta, l_max=l_max, omega=omega)
+    assert snap.counts == expect.counts
+
+
+def _prefix_with_extra(g, miner, step, n_extra):
+    """The ingested stream (g + the n_extra appended edges) cut at the
+    miner's closed time."""
+    t0 = int(g.t[-1])
+    u = np.concatenate([g.u, np.zeros(n_extra, g.u.dtype)])
+    v = np.concatenate([g.v, np.ones(n_extra, g.v.dtype)])
+    t = np.concatenate(
+        [g.t, t0 + step * np.arange(1, n_extra + 1, dtype=g.t.dtype)])
+    full = TemporalGraph(u=u, v=v, t=t, n_nodes=g.n_nodes)
+    return _prefix(full, miner.closed_time)
+
+
 def test_empty_and_tiny_streams():
     miner = StreamingMiner(delta=10, l_max=3)
     assert miner.snapshot().counts == {}
