@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import StreamingMiner, discover, from_edges
+from repro.core import MiningConfig, PTMTEngine, from_edges
 from repro.core.streaming import replay_stream
 
 from .common import csv_row
@@ -33,12 +33,13 @@ def _make_stream(n=4_000, nodes=40, span=30_000, seed=11):
 def run(smoke: bool = False) -> list[str]:
     rows = []
     g = _make_stream(n=1_000 if smoke else 4_000)
-    batch = discover(g, delta=DELTA, l_max=L_MAX, omega=OMEGA)
+    engine = PTMTEngine(MiningConfig(delta=DELTA, l_max=L_MAX, omega=OMEGA))
+    batch = engine.discover(g)
 
     # at least one size does not divide the stream — exercises the ragged tail
     chunks = (128, 192) if smoke else (256, 768, 1024)
     for chunk in chunks:
-        miner = StreamingMiner(delta=DELTA, l_max=L_MAX, omega=OMEGA)
+        miner = engine.stream()
         latencies, total = replay_stream(miner, g, chunk)
         snap = miner.snapshot(final=True)
         exact = snap.counts == batch.counts

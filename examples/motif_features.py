@@ -16,7 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_arch
-from repro.core import discover, oracle
+from repro.core import MiningConfig, PTMTEngine, oracle
 from repro.core.encoding import decode_code_np
 from repro.data.synthetic_graphs import triadic_stream
 from repro.models import gnn
@@ -25,7 +25,8 @@ from repro.training import optimizer
 
 # --- 1. mine motif transition processes ------------------------------------
 graph = triadic_stream(4_000, 120, window=200, p_close=0.55, seed=3)
-res = discover(graph, delta=100, l_max=3, omega=6)
+engine = PTMTEngine(MiningConfig(delta=100, l_max=3, omega=6))
+res = engine.discover(graph)
 top_codes = [c for c, _ in sorted(res.counts.items(),
                                   key=lambda kv: -kv[1])[:8]]
 print(f"mined {len(res.counts)} motif types; top: {top_codes[:4]}")

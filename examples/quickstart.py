@@ -3,31 +3,44 @@
     PYTHONPATH=src python examples/quickstart.py
 
 Builds a small synthetic interaction stream, runs PTMT (zone-partitioned
-parallel discovery), validates against the sequential TMC-analog baseline,
-and prints the motif transition tree (paper Fig. 6).
+parallel discovery) through the session engine, validates against the
+sequential TMC-analog baseline, and prints the motif transition tree
+(paper Fig. 6).
 """
 
-import numpy as np
+import warnings
 
-from repro.core import discover, discover_sequential, from_edges
-
-# a triadic-closure-heavy interaction stream (paper's WikiTalk case study)
-rng = np.random.default_rng(0)
+from repro.core import MiningConfig, PTMTEngine, discover
 from repro.data.synthetic_graphs import triadic_stream
 
+# a triadic-closure-heavy interaction stream (paper's WikiTalk case study)
 graph = triadic_stream(5_000, 150, window=240, p_close=0.5, seed=7)
 print(f"graph: {graph.n_edges} edges / {graph.n_nodes} nodes / "
       f"{graph.time_span}s span")
 
-# --- PTMT: parallel discovery with Temporal Zone Partitioning -------------
-result = discover(graph, delta=120, l_max=4, omega=8)
+# --- PTMT: one validated config, one engine owning warm compile state ------
+config = MiningConfig(delta=120, l_max=4, omega=8)
+engine = PTMTEngine(config)
+result = engine.discover(graph)
 print(f"\nPTMT: {result.n_zones} zones, {len(result.counts)} motif types, "
       f"{result.total_processes()} processes (overflow={result.overflow})")
 
+# a second same-shaped run dispatches straight to the cached executable
+engine.discover(graph)
+print(f"engine reuse: {engine.stats.compile_cache_hits} warm call(s), "
+      f"{engine.stats.compile_cache_misses} compile(s)")
+
 # --- exactness: matches the unpartitioned sequential baseline --------------
-seq = discover_sequential(graph, delta=120, l_max=4)
+seq = engine.sequential(graph)
 assert seq.counts == result.counts, "partitioned counts must be exact!"
 print("exactness check vs sequential baseline: PASS")
+
+# --- the deprecated kwargs API still works (one-shot engine under the hood)
+with warnings.catch_warnings():
+    warnings.simplefilter("ignore", DeprecationWarning)
+    legacy = discover(graph, delta=120, l_max=4, omega=8)
+assert legacy.counts == result.counts
+print("legacy discover() shim agrees: PASS")
 
 # --- the motif transition tree (paper Fig. 6 / Table 6) --------------------
 tree = result.tree()

@@ -1,30 +1,35 @@
-"""Public PTMT API — zone planning, parallel expansion, signed aggregation.
+"""Public PTMT API — result rendering + deprecated one-shot shims.
 
-``discover``            TZP-partitioned parallel discovery (the paper's PTMT).
-``discover_sequential`` single-zone stream scan — the TMC-analog baseline the
-                        paper compares against (identical semantics, no
-                        partitioning, O(n^2) candidate sweep).
+The parameter surface lives in :class:`repro.core.config.MiningConfig` and
+the lifecycle in :class:`repro.core.engine.PTMTEngine`; new code should
+use them directly::
 
-Both return a :class:`DiscoveryResult` whose counts are *exact* (validated
-against the brute-force oracle and each other in tests — the paper's Fig. 7).
+    engine = PTMTEngine(MiningConfig(delta=600, l_max=6))
+    result = engine.discover(graph)          # warm calls reuse executables
+    baseline = engine.sequential(graph)
 
-The actual scan+aggregate work happens in :class:`repro.core.executor.
-MiningExecutor`; this module only plans zones, builds the padded batch, and
-renders the result.  Backends are resolved through
-:mod:`repro.core.backends`.
+``discover`` / ``discover_sequential`` below are kept as thin back-compat
+shims: each constructs a one-shot engine from its kwargs and emits a
+``DeprecationWarning``.  Both return a :class:`DiscoveryResult` whose
+counts are *exact* (validated against the brute-force oracle and each
+other in tests — the paper's Fig. 7).
 """
 
 from __future__ import annotations
 
 import dataclasses
-
-import numpy as np
+import warnings
 
 import jax
 
-from . import transitions, tzp
-from .executor import MiningExecutor
-from .temporal_graph import TemporalGraph
+from . import transitions
+
+_DEPRECATION = (
+    "repro.core.{name}(...) is deprecated; build a PTMTEngine from a "
+    "MiningConfig (repro.core.engine / repro.core.config) and call "
+    "engine.{method}(graph) — the engine reuses compiled executables "
+    "across calls"
+)
 
 
 @dataclasses.dataclass
@@ -57,7 +62,7 @@ def counts_to_result(counts, *, n_zones, e_cap, overflow, delta,
 
 
 def discover(
-    graph: TemporalGraph,
+    graph,
     *,
     delta: int,
     l_max: int,
@@ -72,73 +77,45 @@ def discover(
     mesh: jax.sharding.Mesh | None = None,
     zone_axes: tuple[str, ...] | None = None,
 ) -> DiscoveryResult:
-    """PTMT parallel motif-transition-process discovery.
+    """Deprecated shim for :meth:`repro.core.engine.PTMTEngine.discover`.
 
-    Args:
-      graph: time-sorted temporal edge stream.
-      delta, l_max, omega: paper parameters (Definitions 2-5).
-      e_cap: per-zone edge capacity; zones denser than this are adaptively
-        shrunk by the planner (never below the correctness floor ``2*L_b``).
-      backend: any registered zone-scan backend ("ref", "pallas", "numpy");
-        see :func:`repro.core.backends.available_backends`.
-      zone_chunk: process zones in chunks of this many to bound memory.
-      agg: Phase-2 aggregation mode ("auto" | "legacy" | "hierarchical" |
-        "pipelined") — see :class:`repro.core.executor.MiningExecutor`.
-      merge_cap: hierarchical bounded-merge carry width (None = derived).
-      memory_budget_mb: derive ``zone_chunk``/``merge_cap`` from a device
-        memory budget (:mod:`repro.core.planner`) when ``zone_chunk`` is
-        not given explicitly.
-      allow_overflow: mine even if the zone batch dropped edges beyond
-        ``e_cap`` (the counts then undercount); default is to raise
-        :class:`repro.core.executor.ZoneOverflowError`.
-      mesh/zone_axes: optional mesh to shard the zone axis over (data
-        parallelism across devices — the paper's thread pool).
+    Builds a one-shot engine from the kwargs (see
+    :class:`repro.core.config.MiningConfig` for their meaning) and runs a
+    single discovery — the mesh kwargs route through ``engine.sharded``.
+    Compiled executables are NOT reused across calls to this shim beyond
+    the process-wide jit caches; hold a :class:`PTMTEngine` instead.
     """
-    executor = MiningExecutor(
-        delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk,
-        agg=agg, merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
+    warnings.warn(
+        _DEPRECATION.format(name="discover", method="discover"),
+        DeprecationWarning, stacklevel=2,
     )
-    plan = tzp.plan_zones(graph, delta=delta, l_max=l_max, omega=omega,
-                          e_cap=e_cap)
-    n_shards = 1
+    from .config import MiningConfig
+    from .engine import PTMTEngine
+
+    engine = PTMTEngine(MiningConfig(
+        delta=delta, l_max=l_max, omega=omega, e_cap=e_cap, backend=backend,
+        zone_chunk=zone_chunk, agg=agg, merge_cap=merge_cap,
+        memory_budget_mb=memory_budget_mb, allow_overflow=allow_overflow,
+    ))
     if mesh is not None:
-        axes = zone_axes or tuple(mesh.axis_names)
-        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-    pad_zones = (executor.zone_chunk or 1) * n_shards
-    batch = tzp.build_zone_batch(
-        graph, plan, e_cap=e_cap, pad_zones_to=pad_zones, n_shards=n_shards
-    )
-
-    if mesh is not None:
-        from repro.distributed import mining as dist_mining
-
-        MiningExecutor.check_batch_overflow(batch,
-                                            allow_overflow=allow_overflow)
-        counts = dist_mining.mine_on_mesh(
-            batch, mesh, axes, executor=executor,
-        )
-    else:
-        counts = executor.run(batch, allow_overflow=allow_overflow)
-
-    return counts_to_result(
-        counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
-        overflow=batch.overflow, delta=delta, l_max=l_max,
-    )
+        return engine.sharded(graph, mesh, zone_axes)
+    return engine.discover(graph)
 
 
 def discover_sequential(
-    graph: TemporalGraph, *, delta: int, l_max: int, backend: str = "ref"
+    graph, *, delta: int, l_max: int, backend: str = "ref"
 ) -> DiscoveryResult:
-    """TMC-analog baseline: one zone spanning the whole stream (no TZP)."""
-    n = max(graph.n_edges, 8)
-    u = np.zeros((1, n), np.int32)
-    v = np.zeros((1, n), np.int32)
-    t = np.zeros((1, n), np.int32)
-    valid = np.zeros((1, n), bool)
-    tzp.fill_zone_row(u[0], v[0], t[0], valid[0], graph.u, graph.v, graph.t)
-    executor = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
-                              zone_chunk=0)
-    counts = executor.run_arrays(u, v, t, valid, np.ones(1, np.int32))
-    return counts_to_result(
-        counts, n_zones=1, e_cap=n, overflow=0, delta=delta, l_max=l_max,
+    """Deprecated shim for :meth:`repro.core.engine.PTMTEngine.sequential`.
+
+    The TMC-analog baseline: one zone spanning the whole stream (no TZP).
+    """
+    warnings.warn(
+        _DEPRECATION.format(name="discover_sequential", method="sequential"),
+        DeprecationWarning, stacklevel=2,
     )
+    from .config import MiningConfig
+    from .engine import PTMTEngine
+
+    return PTMTEngine(MiningConfig(
+        delta=delta, l_max=l_max, backend=backend, zone_chunk=0,
+    )).sequential(graph)

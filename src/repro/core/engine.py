@@ -1,0 +1,229 @@
+"""PTMT session engine — one object that owns config + compilation state.
+
+The paper's pipeline is one fixed lifecycle — plan zones (TZP), expand in
+parallel, aggregate, encode — but the entry points had diverged into
+per-call parameter bundles that re-resolved backends, capacity plans, and
+jit state on every invocation.  :class:`PTMTEngine` is the single factory:
+
+* ``engine.discover(graph)``    — batch PTMT discovery;
+* ``engine.sequential(graph)``  — the TMC-analog baseline (one zone, built
+  through :func:`repro.core.tzp.single_zone_plan` — no hand-rolled pad);
+* ``engine.stream()``           — a :class:`repro.core.streaming.
+  StreamingMiner` sharing this engine's executor;
+* ``engine.sharded(graph, mesh, axes)`` — the mesh path, with the jitted
+  SPMD mining step cached per ``(mesh, axes, out_cap, merge_mode)`` so
+  repeated sharded calls skip re-building (and re-jitting) the step;
+* serving sessions take the engine whole: ``MotifSession(name,
+  engine=engine)``.
+
+The engine resolves the backend **once** (at construction, via the
+executor), owns the capacity planner (budget-derived plans are memoized per
+batch geometry), and tracks the compiled-executable reuse that the
+module-level jit caches provide: every run's
+:meth:`~repro.core.executor.MiningExecutor.execution_key` is recorded, and
+a key seen before is a **compile-cache hit** — the call dispatches straight
+to an existing executable with no re-trace.  ``engine.stats`` exposes the
+counters; ``benchmarks/bench_perf_mining.py`` asserts the warm-call
+speedup and CI re-checks it on every push.
+
+The legacy ``discover(...)``/``discover_sequential(...)`` kwargs functions
+in :mod:`repro.core.api` remain as thin deprecated shims that construct a
+one-shot engine.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from . import tzp
+from .api import DiscoveryResult, counts_to_result
+from .config import MiningConfig
+from .executor import MiningExecutor
+from .streaming import StreamingMiner
+from .temporal_graph import TemporalGraph
+
+__all__ = ["EngineStats", "PTMTEngine"]
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Observable engine counters (mutated in place, cheap to read)."""
+
+    discover_calls: int = 0
+    sequential_calls: int = 0
+    sharded_calls: int = 0
+    stream_sessions: int = 0
+    compile_cache_hits: int = 0     # runs whose execution key was seen before
+    compile_cache_misses: int = 0   # runs that had to trace + compile
+    zones_mined: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class PTMTEngine:
+    """Session object for PTMT discovery: validated config + warm jit state.
+
+    Construct from a :class:`~repro.core.config.MiningConfig` (or field
+    overrides — ``PTMTEngine(delta=600, l_max=6)`` builds one), then call
+    any mode repeatedly.  Same-shaped workloads reuse compiled executables:
+    the backend is resolved once, capacity plans are memoized, and the
+    mesh-path SPMD step is cached per mesh geometry.
+
+    Thread-safety matches the underlying executor: concurrent ``discover``
+    calls are safe (state is append-only caches and counters); the stats
+    are best-effort under races.
+    """
+
+    def __init__(self, config: MiningConfig | None = None, **overrides):
+        if config is None:
+            config = MiningConfig(**overrides)
+        elif overrides:
+            config = config.with_updates(**overrides)
+        self.config = config
+        self.executor = MiningExecutor.from_config(config)
+        self.stats = EngineStats()
+        self._seen_keys: set[tuple] = set()
+        self._mesh_steps: dict[tuple, object] = {}
+
+    @property
+    def backend(self) -> str:
+        return self.executor.backend
+
+    def __repr__(self) -> str:
+        return (f"PTMTEngine(backend={self.backend!r}, "
+                f"delta={self.config.delta}, l_max={self.config.l_max}, "
+                f"compiled_plans={len(self._seen_keys)})")
+
+    # -- compilation-state bookkeeping --------------------------------------
+
+    def _note_execution(self, key: tuple, n_zones: int) -> None:
+        """Record a *successful* run's execution key (call after the run —
+        a raised overflow/out_cap error compiles nothing and must not
+        poison the reuse counters the bench and CI assert on)."""
+        if key in self._seen_keys:
+            self.stats.compile_cache_hits += 1
+        else:
+            self._seen_keys.add(key)
+            self.stats.compile_cache_misses += 1
+        self.stats.zones_mined += n_zones
+
+    def capacity_plan(self, n_zones: int, e_cap: int):
+        """Budget-derived capacity plan (None without a budget).
+
+        Delegates to the engine-held executor, which memoizes per batch
+        geometry — repeated same-shaped runs never re-derive the plan.
+        """
+        return self.executor.capacity_plan(n_zones, e_cap)
+
+    # -- batch discovery ----------------------------------------------------
+
+    def _plan_and_batch(self, graph: TemporalGraph, n_shards: int = 1):
+        cfg = self.config
+        plan = tzp.plan_zones(graph, delta=cfg.delta, l_max=cfg.l_max,
+                              omega=cfg.omega, e_cap=cfg.e_cap)
+        pad_zones = (self.executor.zone_chunk or 1) * n_shards
+        batch = tzp.build_zone_batch(graph, plan, e_cap=cfg.e_cap,
+                                     pad_zones_to=pad_zones,
+                                     n_shards=n_shards)
+        return plan, batch
+
+    def discover(self, graph: TemporalGraph) -> DiscoveryResult:
+        """PTMT parallel discovery (plan zones → expand → aggregate).
+
+        Repeated calls on same-shaped workloads dispatch to cached
+        executables (``stats.compile_cache_hits``).
+        """
+        self.stats.discover_calls += 1
+        plan, batch = self._plan_and_batch(graph)
+        key = self.executor.execution_key(batch.n_zones, batch.e_cap)
+        counts = self.executor.run(
+            batch, allow_overflow=self.config.allow_overflow)
+        self._note_execution(key, batch.n_zones)
+        return counts_to_result(
+            counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
+            overflow=batch.overflow, delta=self.config.delta,
+            l_max=self.config.l_max,
+        )
+
+    def sequential(self, graph: TemporalGraph) -> DiscoveryResult:
+        """TMC-analog baseline: one zone spanning the whole stream (no TZP).
+
+        The single-zone batch goes through the same
+        :func:`~repro.core.tzp.build_zone_batch` padding policy as every
+        other mode.
+        """
+        self.stats.sequential_calls += 1
+        plan = tzp.single_zone_plan(graph, l_b=self.config.l_b)
+        batch = tzp.build_zone_batch(graph, plan)
+        key = self.executor.execution_key(batch.n_zones, batch.e_cap)
+        counts = self.executor.run(batch)
+        self._note_execution(key, batch.n_zones)
+        return counts_to_result(
+            counts, n_zones=1, e_cap=batch.e_cap, overflow=batch.overflow,
+            delta=self.config.delta, l_max=self.config.l_max,
+        )
+
+    # -- streaming ----------------------------------------------------------
+
+    def stream(self, **overrides) -> StreamingMiner:
+        """A fresh :class:`StreamingMiner` bound to this engine's config.
+
+        Without overrides the miner shares this engine's executor (and so
+        its warm jit state); with overrides a derived config (and executor)
+        is built for the miner alone.
+        """
+        self.stats.stream_sessions += 1
+        if overrides:
+            return StreamingMiner(config=self.config.with_updates(
+                **overrides))
+        return StreamingMiner(config=self.config, executor=self.executor)
+
+    # -- mesh path ----------------------------------------------------------
+
+    def sharded(
+        self,
+        graph: TemporalGraph,
+        mesh,
+        axes: tuple[str, ...] | None = None,
+        *,
+        out_cap: int = 65536,
+        merge_mode: str = "flat",
+    ) -> DiscoveryResult:
+        """Distributed discovery with zones sharded over ``mesh``.
+
+        The jitted SPMD mining step is cached per ``(mesh, axes, out_cap,
+        merge_mode)`` — the previous per-call ``mine_on_mesh`` rebuilt (and
+        re-jitted) the step every invocation.
+        """
+        from repro.distributed import mining as dist_mining
+
+        self.stats.sharded_calls += 1
+        axes = tuple(axes or mesh.axis_names)
+        n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        plan, batch = self._plan_and_batch(graph, n_shards=n_shards)
+        MiningExecutor.check_batch_overflow(
+            batch, allow_overflow=self.config.allow_overflow)
+
+        step_key = (mesh, axes, out_cap, merge_mode)
+        fn = self._mesh_steps.get(step_key)
+        if fn is None:
+            fn = dist_mining.make_mine_step(
+                mesh, axes, executor=self.executor, out_cap=out_cap,
+                merge_mode=merge_mode,
+            )
+            self._mesh_steps[step_key] = fn
+        # sharded executables are per SPMD step, not shared with the local
+        # jit cache — key on the step too, or a first sharded call after a
+        # same-shaped discover would misreport as a cache hit
+        key = (step_key,
+               self.executor.execution_key(batch.n_zones, batch.e_cap))
+        counts = dist_mining.run_mine_fn(fn, batch, out_cap=out_cap)
+        self._note_execution(key, batch.n_zones)
+        return counts_to_result(
+            counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
+            overflow=batch.overflow, delta=self.config.delta,
+            l_max=self.config.l_max,
+        )

@@ -250,6 +250,11 @@ class MiningExecutor:
         self.delta = int(delta)
         self.l_max = int(l_max)
         self.spec = backends.get_backend(backend)
+        # an explicit zone_chunk=0 means "unchunked, full batch" (the
+        # sequential baseline's contract) and must beat a budget-derived
+        # chunk, exactly like any other explicit value; only None falls
+        # through to the backend hint / capacity planner
+        self._zone_chunk_explicit = zone_chunk is not None
         if zone_chunk is None:
             zone_chunk = self.spec.default_zone_chunk
         self.zone_chunk = int(zone_chunk or 0)
@@ -257,27 +262,75 @@ class MiningExecutor:
         self.agg = agg
         self.merge_cap = int(merge_cap) if merge_cap else None
         self.memory_budget_mb = memory_budget_mb
+        self._plan_cache: dict[tuple, object] = {}
+
+    @classmethod
+    def from_config(cls, config) -> "MiningExecutor":
+        """Build an executor from a :class:`repro.core.config.MiningConfig`.
+
+        Duck-typed (any object with the execution fields works) so this
+        module never imports ``config`` — the config layer imports the
+        executor for ``AGG_MODES``, not the other way around.
+        """
+        return cls(
+            delta=config.delta, l_max=config.l_max, backend=config.backend,
+            zone_chunk=config.zone_chunk, agg=config.agg,
+            merge_cap=config.merge_cap,
+            memory_budget_mb=config.memory_budget_mb,
+        )
 
     @property
     def backend(self) -> str:
         return self.spec.name
 
+    def execution_key(self, z: int, e: int) -> tuple:
+        """The compile-cache key a ``[z, e]`` zone batch resolves to.
+
+        Mirrors ``run_arrays``'s resolution order exactly: chunk size from
+        the raw shape, zone padding, then agg mode and merge cap from the
+        padded shape.  Two batches with equal keys reuse one jitted
+        executable (the jit caches are keyed on the same statics plus these
+        shapes), so :class:`repro.core.engine.PTMTEngine` counts warm calls
+        by tracking keys it has seen.  A merge-cap spill retry recompiles at
+        a doubled cap without changing the key — rare, and the retry warns.
+        """
+        zc = self._zone_chunk_for(z, e)
+        if zc and zc < z and z % zc != 0:
+            z += zc - z % zc
+        mode = self._agg_mode_for(zc, z)
+        merge_cap = (self._merge_cap_for(zc, z, e)
+                     if mode != "legacy" else 0)
+        return (self.backend, self.delta, self.l_max, z, e, zc, mode,
+                merge_cap)
+
     # -- capacity resolution ------------------------------------------------
 
     def capacity_plan(self, n_zones: int, e_cap: int):
         """Budget-derived :class:`~repro.core.planner.CapacityPlan`, or
-        None when no ``memory_budget_mb`` was configured."""
+        None when no ``memory_budget_mb`` was configured.
+
+        Memoized per ``(n_zones, e_cap)`` — the chunk resolution consults
+        it on every run (and the engine's ``execution_key`` again), so
+        repeated same-shaped runs must not re-derive the plan.
+        """
         if self.memory_budget_mb is None:
             return None
-        return planner.plan_capacity(
-            n_zones=n_zones, e_cap=e_cap, l_max=self.l_max,
-            memory_budget_mb=self.memory_budget_mb,
-            mem_model=self.spec.mem_model, merge_cap=self.merge_cap,
-        )
+        key = (n_zones, e_cap)
+        plan = self._plan_cache.get(key)
+        if plan is None:
+            plan = planner.plan_capacity(
+                n_zones=n_zones, e_cap=e_cap, l_max=self.l_max,
+                memory_budget_mb=self.memory_budget_mb,
+                mem_model=self.spec.mem_model, merge_cap=self.merge_cap,
+            )
+            self._plan_cache[key] = plan
+        return plan
 
     def _zone_chunk_for(self, z: int, e: int) -> int:
         if self.zone_chunk:
             return self.zone_chunk
+        if self._zone_chunk_explicit:
+            return 0           # explicitly unchunked: never consult a budget
         plan = self.capacity_plan(z, e)
         if plan is None:
             return 0

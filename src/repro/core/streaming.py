@@ -36,6 +36,7 @@ import numpy as np
 
 from . import transitions, tzp
 from .api import DiscoveryResult
+from .config import MiningConfig
 from .executor import MiningExecutor
 from .temporal_graph import TemporalGraph
 
@@ -77,14 +78,13 @@ def replay_stream(miner: "StreamingMiner", graph, chunk_edges: int):
 class StreamingMiner:
     """Ingests time-ordered edge chunks; maintains running exact counts.
 
-    Args:
-      delta, l_max, omega, e_cap: paper parameters, as in ``discover``.
-      backend: registered zone-scan backend name.
-      zone_chunk: executor memory bound (chunked zone sweep).
-      agg / merge_cap / memory_budget_mb: Phase-2 aggregation mode, the
-        hierarchical bounded-merge carry width, and the device-memory
-        budget the executor derives chunking from — see
-        :class:`repro.core.executor.MiningExecutor`.
+    Parameters come in as one validated
+    :class:`~repro.core.config.MiningConfig` (``config=``), or as the
+    legacy individual kwargs (``delta=, l_max=, ...`` — a config is built
+    internally), but never both.  ``executor=`` optionally shares an
+    already-built :class:`MiningExecutor` (the
+    :class:`repro.core.engine.PTMTEngine` path — one warm backend across
+    batch and stream modes); it must agree with the config.
 
     Usage::
 
@@ -98,30 +98,58 @@ class StreamingMiner:
     def __init__(
         self,
         *,
-        delta: int,
-        l_max: int,
-        omega: int = 20,
+        config: MiningConfig | None = None,
+        executor: MiningExecutor | None = None,
+        delta: int | None = None,
+        l_max: int | None = None,
+        omega: int | None = None,
         e_cap: int | None = None,
-        backend: str = "ref",
+        backend: str | None = None,
         zone_chunk: int | None = None,
-        agg: str = "auto",
+        agg: str | None = None,
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
     ):
-        if delta < 1 or l_max < 1:
-            raise ValueError("delta and l_max must be >= 1")
-        if omega < 2:
-            raise ValueError("omega must be >= 2")
-        self.delta = int(delta)
-        self.l_max = int(l_max)
-        self.omega = int(omega)
-        self.e_cap = e_cap
-        self.l_b = self.delta * self.l_max
+        legacy = {k: v for k, v in dict(
+            delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
+            backend=backend, zone_chunk=zone_chunk, agg=agg,
+            merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
+        ).items() if v is not None}
+        if config is None:
+            # delta/l_max have no safe fallback here: silently mining with
+            # the config defaults would return plausible-but-wrong counts
+            if delta is None or l_max is None:
+                raise ValueError(
+                    "delta and l_max are required (or pass config=)")
+            config = MiningConfig(**legacy)     # validates
+        elif legacy:
+            raise ValueError(
+                f"pass either a MiningConfig or individual parameters, "
+                f"not both (got config plus {sorted(legacy)})")
+        if executor is not None:
+            # self.config is exposed as the source of truth for execution
+            # parameters (the serving layer reports it), so a shared
+            # executor must match on every field from_config would set
+            ref = MiningExecutor.from_config(config)
+            mismatch = [
+                f for f in ("delta", "l_max", "backend", "zone_chunk",
+                            "agg", "merge_cap", "memory_budget_mb")
+                if getattr(executor, f) != getattr(ref, f)
+            ]
+            if mismatch:
+                raise ValueError(
+                    f"executor disagrees with config on {mismatch} — "
+                    f"mining would not run with the parameters "
+                    f"self.config reports")
+        self.config = config
+        self.delta = config.delta
+        self.l_max = config.l_max
+        self.omega = config.omega
+        self.e_cap = config.e_cap
+        self.l_b = config.l_b
         self.l_g = self.omega * self.l_b
-        self.executor = MiningExecutor(
-            delta=delta, l_max=l_max, backend=backend, zone_chunk=zone_chunk,
-            agg=agg, merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
-        )
+        self.executor = executor if executor is not None \
+            else MiningExecutor.from_config(config)
 
         self._u = np.zeros(0, np.int32)     # sliding buffer: edges >= s
         self._v = np.zeros(0, np.int32)

@@ -140,6 +140,28 @@ def plan_zones(
     )
 
 
+def single_zone_plan(graph: TemporalGraph, *, l_b: int) -> ZonePlan:
+    """One growth zone spanning the whole stream (the TMC-analog baseline).
+
+    The degenerate partition: no boundary zones, sign +1, every edge in one
+    row.  Routing the sequential baseline through this plan +
+    :func:`build_zone_batch` keeps the padding/fill policy in exactly one
+    place instead of a hand-rolled zero-pad block at the call site.
+    """
+    t = graph.t.astype(np.int64)
+    n = int(t.shape[0])
+    t0 = int(t[0]) if n else 0
+    t_end = int(t[-1]) + 1 if n else 1
+    return ZonePlan(
+        lo=np.zeros(1, np.int64),
+        count=np.asarray([n], np.int64),
+        sign=np.ones(1, np.int32),
+        t_start=np.asarray([t0], np.int64),
+        t_end=np.asarray([t_end], np.int64),
+        l_b=l_b,
+    )
+
+
 @dataclasses.dataclass(frozen=True)
 class ZoneBatch:
     """Device-ready padded zone batch.

@@ -41,10 +41,14 @@ def _as_executor(
     zone_chunk: int | None,
     agg: str = "auto",
     merge_cap: int | None = None,
+    config=None,
 ) -> MiningExecutor:
+    if executor is None and config is not None:
+        executor = MiningExecutor.from_config(config)
     if executor is None:
         if delta is None or l_max is None:
-            raise ValueError("pass either an executor or delta+l_max")
+            raise ValueError(
+                "pass an executor, a MiningConfig, or delta+l_max")
         executor = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
                                   zone_chunk=zone_chunk, agg=agg,
                                   merge_cap=merge_cap)
@@ -61,6 +65,7 @@ def make_mine_fn(
     axes: tuple[str, ...],
     *,
     executor: MiningExecutor | None = None,
+    config=None,
     delta: int | None = None,
     l_max: int | None = None,
     backend: str = "ref",
@@ -74,7 +79,8 @@ def make_mine_fn(
 
     Returns ``fn(u, v, t, valid, signs) -> (CodeCounts, overflow)`` where the
     zone axis (leading) is sharded over ``axes`` and the result is replicated.
-    Pass a configured :class:`MiningExecutor` or the legacy
+    Pass a configured :class:`MiningExecutor`, a
+    :class:`repro.core.config.MiningConfig`, or the legacy
     delta/l_max/backend/zone_chunk (+ agg/merge_cap) kwargs (an executor is
     built internally).  With a chunked executor the per-shard aggregation is
     the hierarchical bounded-carry fold; its merge-cap spills are folded
@@ -92,7 +98,7 @@ def make_mine_fn(
     """
     executor = _as_executor(executor, delta=delta, l_max=l_max,
                             backend=backend, zone_chunk=zone_chunk,
-                            agg=agg, merge_cap=merge_cap)
+                            agg=agg, merge_cap=merge_cap, config=config)
     zone_spec = P(axes)
     scalar_spec = P(axes)
 
@@ -140,26 +146,16 @@ def make_mine_step(mesh, axes, **kw):
     return jax.jit(make_mine_fn(mesh, axes, **kw))
 
 
-def mine_on_mesh(
-    batch,
-    mesh: jax.sharding.Mesh,
-    axes: tuple[str, ...],
-    *,
-    executor: MiningExecutor | None = None,
-    delta: int | None = None,
-    l_max: int | None = None,
-    backend: str = "ref",
-    zone_chunk: int | None = None,
-    agg: str = "auto",
-    merge_cap: int | None = None,
-    out_cap: int = 65536,
-) -> CodeCounts:
-    """Run distributed discovery over a host-built :class:`ZoneBatch`."""
-    fn = make_mine_step(
-        mesh, axes, executor=executor, delta=delta, l_max=l_max,
-        backend=backend, zone_chunk=zone_chunk or 0, agg=agg,
-        merge_cap=merge_cap, out_cap=out_cap,
-    )
+def run_mine_fn(fn, batch, *, out_cap: int = 65536) -> CodeCounts:
+    """Drive a built mining step over a host :class:`ZoneBatch`.
+
+    The single copy of the device-transfer + overflow-surfacing policy:
+    :func:`mine_on_mesh` (one-shot) and
+    :meth:`repro.core.engine.PTMTEngine.sharded` (cached step) both call
+    it.  A positive psum'd overflow flag — collective ``out_cap`` exceeded
+    or a hierarchical ``merge_cap`` carry spill — raises instead of
+    silently truncating.
+    """
     counts, overflow = fn(
         jnp.asarray(batch.u), jnp.asarray(batch.v), jnp.asarray(batch.t),
         jnp.asarray(batch.valid), jnp.asarray(batch.sign),
@@ -173,6 +169,35 @@ def mine_on_mesh(
             f"merge_cap"
         )
     return counts
+
+
+def mine_on_mesh(
+    batch,
+    mesh: jax.sharding.Mesh,
+    axes: tuple[str, ...],
+    *,
+    executor: MiningExecutor | None = None,
+    config=None,
+    delta: int | None = None,
+    l_max: int | None = None,
+    backend: str = "ref",
+    zone_chunk: int | None = None,
+    agg: str = "auto",
+    merge_cap: int | None = None,
+    out_cap: int = 65536,
+) -> CodeCounts:
+    """Run distributed discovery over a host-built :class:`ZoneBatch`.
+
+    One-shot: builds (and jits) the step per call.  For repeated sharded
+    runs use :meth:`repro.core.engine.PTMTEngine.sharded`, which caches the
+    compiled step per mesh geometry.
+    """
+    fn = make_mine_step(
+        mesh, axes, executor=executor, config=config, delta=delta,
+        l_max=l_max, backend=backend, zone_chunk=zone_chunk or 0, agg=agg,
+        merge_cap=merge_cap, out_cap=out_cap,
+    )
+    return run_mine_fn(fn, batch, out_cap=out_cap)
 
 
 def input_specs(n_zones: int, e_cap: int):

@@ -2,26 +2,27 @@
 
 ``python -m repro.launch.mine --dataset wikitalk-like --delta 600 --l-max 6``
 
-Runs TZP partitioning + (optionally multi-device) parallel expansion +
-signed aggregation, prints the transition tree, and can cross-check against
-the sequential TMC-analog baseline.
+Runs TZP partitioning + parallel expansion + signed aggregation through one
+:class:`repro.core.engine.PTMTEngine`, prints the transition tree, and can
+cross-check against the sequential TMC-analog baseline.
+
+The mining parameter surface (``--delta/--l-max/--omega/--e-cap/--backend/
+--zone-chunk/--agg/--merge-cap/--memory-budget-mb/--allow-overflow``) is
+declared by :meth:`repro.core.config.MiningConfig.add_cli_args` — shared
+verbatim with ``launch/serve_motifs.py`` — and parsed back into the
+validated config the engine is built from.
 
 ``--stream --chunk-edges N`` replays the dataset as an incremental stream
-through :class:`repro.core.StreamingMiner` (per-chunk latency + sustained
-edges/sec); combine with ``--check-sequential`` to verify the final
-snapshot against the sequential baseline.
-
-``--agg hierarchical|pipelined`` selects the bounded-memory Phase-2
-aggregation and ``--memory-budget-mb`` lets the capacity planner derive
-``zone_chunk``/``merge_cap`` from a device-memory budget; ``--allow-overflow``
-opts in to mining batches that dropped edges beyond ``e_cap`` (undercounts,
-refused by default).
+through ``engine.stream()`` (per-chunk latency + sustained edges/sec);
+combine with ``--check-sequential`` to verify the final snapshot against
+the sequential baseline.
 
 Batch and stream runs emit the **same** end-of-run summary, and
 ``--out-json FILE`` writes it with one schema for both modes (stream-only
 frontier stats live under a ``stream`` key that is ``null`` for batch
-runs) — downstream tooling never special-cases stream output.
-``--json-out`` keeps the legacy counts-only dump.
+runs) — downstream tooling never special-cases stream output.  The legacy
+``--json-out`` counts-only dump was removed; read ``counts`` out of the
+``--out-json`` summary instead.
 """
 
 from __future__ import annotations
@@ -30,13 +31,7 @@ import argparse
 import json
 import time
 
-from repro.core import (
-    StreamingMiner,
-    available_backends,
-    discover,
-    discover_sequential,
-)
-from repro.core import executor
+from repro.core import MiningConfig, PTMTEngine
 from repro.core.streaming import replay_stream
 from repro.data import synthetic_graphs
 
@@ -57,21 +52,14 @@ def _print_result(res, dt: float, label: str) -> None:
             print(f"    -> {ccode}: {ccount} ({cshare:.1%})")
 
 
-def _summary(args, graph, res, dt: float, mode: str,
+def _summary(args, config: MiningConfig, graph, res, dt: float, mode: str,
              stream_stats: dict | None) -> dict:
     """One schema for batch and stream runs (``stream`` is null for batch)."""
     return {
         "mode": mode,
         "dataset": args.dataset,
         "seed": args.seed,
-        "backend": args.backend,
-        "delta": args.delta,
-        "l_max": args.l_max,
-        "omega": args.omega,
-        "e_cap": args.e_cap,
-        "agg": args.agg,
-        "merge_cap": args.merge_cap,
-        "memory_budget_mb": args.memory_budget_mb,
+        **config.to_dict(),
         "n_edges": graph.n_edges,
         "n_nodes": graph.n_nodes,
         "seconds": dt,
@@ -89,14 +77,10 @@ def _summary(args, graph, res, dt: float, mode: str,
     }
 
 
-def _run_stream(args, graph):
+def _run_stream(args, engine: PTMTEngine, graph):
     if args.chunk_edges < 1:
         raise SystemExit("--chunk-edges must be >= 1")
-    miner = StreamingMiner(
-        delta=args.delta, l_max=args.l_max, omega=args.omega,
-        e_cap=args.e_cap, backend=args.backend, agg=args.agg,
-        merge_cap=args.merge_cap, memory_budget_mb=args.memory_budget_mb,
-    )
+    miner = engine.stream()
     chunk = args.chunk_edges
     latencies, dt = replay_stream(miner, graph, chunk)
     res = miner.snapshot(final=True)
@@ -126,30 +110,13 @@ def _run_stream(args, graph):
 
 def main():
     ap = argparse.ArgumentParser()
+    MiningConfig.add_cli_args(ap)
     ap.add_argument("--dataset", default="wikitalk-like",
                     choices=sorted(synthetic_graphs.DATASET_ANALOGS))
-    ap.add_argument("--delta", type=int, default=600)
-    ap.add_argument("--l-max", type=int, default=6)
-    ap.add_argument("--omega", type=int, default=20)
-    ap.add_argument("--e-cap", type=int, default=None)
-    ap.add_argument("--agg", default="auto", choices=list(executor.AGG_MODES),
-                    help="Phase-2 aggregation: hierarchical/pipelined bound "
-                         "peak memory to O(zone_chunk) instead of O(zones)")
-    ap.add_argument("--merge-cap", type=int, default=None,
-                    help="hierarchical bounded-merge carry width (default: "
-                         "derived from zone_chunk)")
-    ap.add_argument("--memory-budget-mb", type=float, default=None,
-                    help="derive zone_chunk/merge_cap from this device "
-                         "memory budget (core.planner) instead of hints")
-    ap.add_argument("--allow-overflow", action="store_true",
-                    help="mine even if the zone batch dropped edges beyond "
-                         "e_cap (counts then undercount; default: error)")
-    ap.add_argument("--backend", default="ref",
-                    choices=list(available_backends()))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--stream", action="store_true",
                     help="replay the dataset incrementally through "
-                         "StreamingMiner")
+                         "engine.stream()")
     ap.add_argument("--chunk-edges", type=int, default=4096,
                     help="edges per ingested chunk in --stream mode")
     ap.add_argument("--check-sequential", action="store_true")
@@ -157,26 +124,20 @@ def main():
     ap.add_argument("--out-json", default=None,
                     help="write the full run summary (same schema for "
                          "batch and stream modes)")
-    ap.add_argument("--json-out", default=None,
-                    help="legacy counts-only JSON dump")
     args = ap.parse_args()
 
+    config = MiningConfig.from_cli_args(args)
+    engine = PTMTEngine(config)
     graph = synthetic_graphs.make(args.dataset, seed=args.seed)
     print(f"{args.dataset}: {graph.n_edges} edges, {graph.n_nodes} nodes, "
           f"span {graph.time_span}s")
 
     if args.stream:
-        res, dt, stream_stats = _run_stream(args, graph)
+        res, dt, stream_stats = _run_stream(args, engine, graph)
         mode = "stream"
     else:
         t0 = time.perf_counter()
-        res = discover(
-            graph, delta=args.delta, l_max=args.l_max, omega=args.omega,
-            e_cap=args.e_cap, backend=args.backend, agg=args.agg,
-            merge_cap=args.merge_cap,
-            memory_budget_mb=args.memory_budget_mb,
-            allow_overflow=args.allow_overflow,
-        )
+        res = engine.discover(graph)
         dt = time.perf_counter() - t0
         stream_stats = None
         mode = "batch"
@@ -184,8 +145,7 @@ def main():
 
     if args.check_sequential:
         t0 = time.perf_counter()
-        seq = discover_sequential(graph, delta=args.delta,
-                                  l_max=args.l_max)
+        seq = engine.sequential(graph)
         dt_seq = time.perf_counter() - t0
         match = seq.counts == res.counts
         print(f"\nsequential TMC-analog: {dt_seq:.2f}s, "
@@ -195,14 +155,10 @@ def main():
 
     if args.out_json:
         with open(args.out_json, "w") as f:
-            json.dump(_summary(args, graph, res, dt, mode, stream_stats),
+            json.dump(_summary(args, config, graph, res, dt, mode,
+                               stream_stats),
                       f, indent=1, sort_keys=True)
         print(f"summary written to {args.out_json}")
-
-    if args.json_out:
-        with open(args.json_out, "w") as f:
-            json.dump(res.counts, f, indent=1, sort_keys=True)
-        print(f"counts written to {args.json_out}")
 
 
 if __name__ == "__main__":

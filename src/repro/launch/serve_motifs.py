@@ -7,10 +7,14 @@ The dataset's edge stream is strided into ``--tenants`` time-ordered tenant
 streams, replayed round-robin in ``--chunk-edges`` arrival chunks through
 :class:`repro.serving.motif.MotifService`, and after every chunk each tenant
 receives ``--queries-per-chunk`` queries drawn from a fixed mix (top-k,
-transition probabilities, prefix counts, level histogram).  The report is
+transition probabilities, prefix counts, level histogram).  All tenants
+mine through ONE shared :class:`repro.core.engine.PTMTEngine` (one
+resolved backend, one warm compile cache — the deployment shape), built
+from the same :meth:`repro.core.config.MiningConfig.add_cli_args` flag
+surface as ``launch/mine.py``.  The report is
 the serving SLO view: sustained ingest edges/sec, query p50/p99 latency
 per op, and snapshot-cache effectiveness.  ``--verify`` cross-checks every
-tenant's final engine against batch ``discover`` on its closed prefix
+tenant's final engine against batch discovery on its closed prefix
 (exact by Lemma 4.2); ``--out-json`` writes the full report for tooling.
 """
 
@@ -22,7 +26,7 @@ import time
 
 import numpy as np
 
-from repro.core import available_backends, discover
+from repro.core import MiningConfig, PTMTEngine
 from repro.core.temporal_graph import TemporalGraph
 from repro.data import synthetic_graphs
 from repro.serving.motif import MotifService, QueryRequest
@@ -134,7 +138,7 @@ def build_report(service, names, n_edges, wall, ingest_lat, query_lat):
 
 def verify_against_batch(service, names, streams, *, delta, l_max, omega,
                          e_cap=None, backend="ref") -> list[dict]:
-    """Per-tenant cross-check of served counts against batch ``discover`` on
+    """Per-tenant cross-check of served counts against batch discovery on
     the closed prefix — the serving-layer restatement of the Lemma 4.2 test.
 
     Returns one row per tenant.  A row with ``batch_overflow > 0`` means the
@@ -143,6 +147,10 @@ def verify_against_batch(service, names, streams, *, delta, l_max, omega,
     only meaningful when ``batch_overflow == 0``, so ``match`` is ``None``
     for those rows and callers must not fail on them.
     """
+    ref_engine = PTMTEngine(MiningConfig(
+        delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
+        backend=backend, allow_overflow=True,
+    ))
     rows = []
     for name, g in zip(names, streams):
         service.flush(name)
@@ -158,8 +166,7 @@ def verify_against_batch(service, names, streams, *, delta, l_max, omega,
             continue
         prefix = TemporalGraph(u=g.u[:cut], v=g.v[:cut], t=g.t[:cut],
                                n_nodes=g.n_nodes)
-        expect = discover(prefix, delta=delta, l_max=l_max, omega=omega,
-                          e_cap=e_cap, backend=backend, allow_overflow=True)
+        expect = ref_engine.discover(prefix)
         rows.append({
             "tenant": name,
             "prefix_edges": prefix.n_edges,
@@ -173,15 +180,10 @@ def verify_against_batch(service, names, streams, *, delta, l_max, omega,
 
 def main():
     ap = argparse.ArgumentParser()
+    MiningConfig.add_cli_args(ap)
     ap.add_argument("--dataset", default="sms-a-like",
                     choices=sorted(synthetic_graphs.DATASET_ANALOGS))
     ap.add_argument("--tenants", type=int, default=4)
-    ap.add_argument("--delta", type=int, default=600)
-    ap.add_argument("--l-max", type=int, default=6)
-    ap.add_argument("--omega", type=int, default=20)
-    ap.add_argument("--e-cap", type=int, default=None)
-    ap.add_argument("--backend", default="ref",
-                    choices=list(available_backends()))
     ap.add_argument("--chunk-edges", type=int, default=2048,
                     help="edges per tenant arrival chunk")
     ap.add_argument("--ingest-batch", type=int, default=8192,
@@ -195,14 +197,12 @@ def main():
     if args.tenants < 1:
         raise SystemExit("--tenants must be >= 1")
 
+    config = MiningConfig.from_cli_args(args)
+    engine = PTMTEngine(config)
     graph = synthetic_graphs.make(args.dataset, seed=args.seed)
     streams = tenant_streams(graph, args.tenants)
     names = [f"tenant{i}" for i in range(args.tenants)]
-    service = MotifService(
-        delta=args.delta, l_max=args.l_max, omega=args.omega,
-        e_cap=args.e_cap, backend=args.backend,
-        ingest_batch=args.ingest_batch,
-    )
+    service = MotifService(engine=engine, ingest_batch=args.ingest_batch)
     for name in names:
         service.create_session(name)
     print(f"{args.dataset}: {graph.n_edges} edges over {args.tenants} "

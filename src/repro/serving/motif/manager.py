@@ -17,6 +17,11 @@ class SessionManager:
     """Hosts many named tenant sessions with a bounded session count."""
 
     def __init__(self, *, max_sessions: int = 64, **session_defaults):
+        """``session_defaults`` seed every :meth:`create` call — typically
+        ``engine=`` (one shared :class:`repro.core.engine.PTMTEngine`, the
+        multi-tenant deployment shape: each session's miner shares the
+        engine's warm executor) or ``config=`` plus serving knobs like
+        ``ingest_batch``; per-tenant ``create(**params)`` overrides win."""
         if max_sessions < 1:
             raise ValueError("max_sessions must be >= 1")
         self.max_sessions = int(max_sessions)

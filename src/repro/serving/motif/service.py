@@ -52,7 +52,13 @@ class IngestAck:
 
 
 class MotifService:
-    """Multi-tenant motif analytics over streaming discovery."""
+    """Multi-tenant motif analytics over streaming discovery.
+
+    ``manager_kwargs`` flow into :class:`SessionManager` as session
+    defaults — ``MotifService(engine=PTMTEngine(cfg), ingest_batch=8192)``
+    is the standard deployment: every tenant session mines through the one
+    shared engine (one resolved backend, one warm compile cache).
+    """
 
     def __init__(self, manager: SessionManager | None = None,
                  **manager_kwargs):

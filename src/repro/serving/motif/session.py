@@ -28,6 +28,7 @@ import threading
 
 import numpy as np
 
+from repro.core.config import MiningConfig
 from repro.core.streaming import StreamingMiner
 
 from .cache import EpochCache
@@ -35,19 +36,34 @@ from .query import QueryEngine
 
 
 class MotifSession:
-    """A named tenant stream with its own miner, buffer, and cache."""
+    """A named tenant stream with its own miner, buffer, and cache.
+
+    Mining parameters come in one of three equivalent ways (most to least
+    preferred): ``engine=`` — a :class:`repro.core.engine.PTMTEngine`
+    whose config *and* warm executor the session's miner shares (the
+    serving deployment shape: many tenants, one engine; individual kwargs
+    alongside it are per-tenant overrides of the engine's config, routed
+    through ``engine.stream(**overrides)``); ``config=`` — a validated
+    :class:`~repro.core.config.MiningConfig`; or the legacy individual
+    kwargs alone (a config is built and validated internally, ``delta`` and
+    ``l_max`` required).  ``engine`` and ``config`` together are ambiguous
+    and rejected.  ``ingest_batch`` / ``cache_capacity`` are serving-side
+    knobs and stay per-session.
+    """
 
     def __init__(
         self,
         name: str,
         *,
-        delta: int,
-        l_max: int,
-        omega: int = 20,
+        engine=None,
+        config: MiningConfig | None = None,
+        delta: int | None = None,
+        l_max: int | None = None,
+        omega: int | None = None,
         e_cap: int | None = None,
-        backend: str = "ref",
+        backend: str | None = None,
         zone_chunk: int | None = None,
-        agg: str = "auto",
+        agg: str | None = None,
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
         ingest_batch: int = 4096,
@@ -57,11 +73,23 @@ class MotifSession:
             raise ValueError("ingest_batch must be >= 1")
         self.name = name
         self.ingest_batch = int(ingest_batch)
-        self.miner = StreamingMiner(
+        legacy = {k: v for k, v in dict(
             delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
             backend=backend, zone_chunk=zone_chunk, agg=agg,
             merge_cap=merge_cap, memory_budget_mb=memory_budget_mb,
-        )
+        ).items() if v is not None}
+        if engine is not None:
+            if config is not None:
+                raise ValueError(
+                    "pass either an engine or a config, not both")
+            self.miner = engine.stream(**legacy)
+        else:
+            self.miner = StreamingMiner(config=config, **legacy)
+        # NB: distinct from the .engine() *method*, which returns the
+        # per-epoch QueryEngine — mining_engine is the PTMTEngine this
+        # session was built from (None on the config/kwargs paths)
+        self.mining_engine = engine
+        self.config = self.miner.config
         self.cache = EpochCache(cache_capacity)
         self.lock = threading.RLock()
         self._pend_u: list[np.ndarray] = []
