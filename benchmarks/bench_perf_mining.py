@@ -21,7 +21,13 @@ Measures, on real zone batches (not ShapeDtypeStructs):
    ``PTMTEngine.discover`` on the same-shaped workload.  The warm call must
    register a compile-cache hit and be measurably faster — this is the
    acceptance gate for the session-engine API and is re-asserted by CI on
-   the smoke JSON.
+   the smoke JSON;
+6. **ragged zone layout** (core/tzp ``ZoneBatchLayout``): dense vs
+   size-bucketed padding ratio, per-bucket occupancy, and measured
+   edges/sec on a bursty corpus whose zone sizes span several power-of-two
+   buckets, plus proof that the engine's per-bucket compile cache still
+   registers hits under the bucketed layout.  CI asserts
+   ``padding_ratio_bucketed < padding_ratio_dense`` on the smoke JSON.
 
 ``run_json`` additionally returns a structured payload for
 ``benchmarks/run.py --out-json`` (edges/sec + peak-memory estimates + the
@@ -158,6 +164,79 @@ def _hierarchical_section(smoke: bool):
     return rows, {"throughput": throughput, "memory_ceiling": ceiling}
 
 
+def _zone_layout_section(smoke: bool):
+    """Dense vs size-bucketed layout on a bursty (skewed-zone) corpus."""
+    from repro.core import MiningExecutor as _Ex
+
+    n_edges = 2_500 if smoke else 20_000
+    g = sg.bursty_stream(n_edges, 250, burst_size=120, burst_span=200,
+                         gap_span=30_000, seed=13)
+    plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2)
+    layouts = {
+        kind: tzp.build_zone_layout(g, plan, layout=kind)
+        for kind in ("dense", "bucketed")
+    }
+    assert layouts["bucketed"].n_buckets >= 3, \
+        "bursty corpus must span >= 3 buckets"
+
+    modes = {}
+    counts_seen = {}
+    for kind, lay in layouts.items():
+        ex = _Ex(delta=DELTA, l_max=L_MAX)
+        run = lambda lay=lay, ex=ex: transitions.device_counts_to_dict(
+            ex.run_layout(lay))
+        counts, secs = timed(run, warmup=1, repeats=1 if smoke else 2)
+        counts_seen[kind] = counts
+        modes[kind] = {
+            "seconds": secs,
+            "edges_per_s": g.n_edges / secs if secs else 0.0,
+            "padding_ratio": lay.padding_ratio,
+            "padded_slots": lay.padded_slots,
+            "sweep_slots": lay.sweep_slots,
+        }
+    assert counts_seen["bucketed"] == counts_seen["dense"], \
+        "layouts disagree — differential bug"
+
+    # the per-bucket compile cache must keep registering hits: a second
+    # same-graph discover dispatches every bucket to a cached executable
+    # (and skips host-side planning via the zone-plan cache)
+    engine = PTMTEngine(MiningConfig(delta=DELTA, l_max=L_MAX, omega=2,
+                                     zone_layout="bucketed"))
+    engine.discover(g)
+    engine.discover(g)
+    payload = {
+        "edges": g.n_edges,
+        "n_zones": plan.n_zones,
+        "modes": modes,
+        "padding_ratio_dense": modes["dense"]["padding_ratio"],
+        "padding_ratio_bucketed": modes["bucketed"]["padding_ratio"],
+        "buckets": layouts["bucketed"].summary()["buckets"],
+        "compile_cache_hits_bucketed": engine.stats.compile_cache_hits,
+        "plan_cache_hits": engine.stats.plan_cache_hits,
+        "speedup_bucketed_vs_dense": (
+            modes["dense"]["seconds"] / modes["bucketed"]["seconds"]
+            if modes["bucketed"]["seconds"] else 0.0),
+    }
+    rows = [
+        csv_row(
+            f"perf_mining/zone_layout_{kind}", m["seconds"],
+            f"edges_per_s={m['edges_per_s']:.0f};"
+            f"padding_ratio={m['padding_ratio']:.3f};"
+            f"sweep_slots={m['sweep_slots']}",
+        )
+        for kind, m in modes.items()
+    ]
+    rows.append(csv_row(
+        "perf_mining/zone_layout", 0.0,
+        f"buckets={len(payload['buckets'])};"
+        f"pad_dense={payload['padding_ratio_dense']:.3f};"
+        f"pad_bucketed={payload['padding_ratio_bucketed']:.3f};"
+        f"speedup={payload['speedup_bucketed_vs_dense']:.2f}x;"
+        f"bucketed_cache_hits={payload['compile_cache_hits_bucketed']}",
+    ))
+    return rows, payload
+
+
 def _engine_reuse_section(smoke: bool):
     """Cold vs warm ``PTMTEngine.discover`` on one workload shape.
 
@@ -276,6 +355,11 @@ def run_json(smoke: bool = False):
     reuse_rows, reuse_payload = _engine_reuse_section(smoke)
     rows.extend(reuse_rows)
     payload["engine_reuse"] = reuse_payload
+
+    # 6) ragged zone layout: bucketed must waste fewer padded slots
+    layout_rows, layout_payload = _zone_layout_section(smoke)
+    rows.extend(layout_rows)
+    payload["zone_layout"] = layout_payload
     return rows, payload
 
 

@@ -25,10 +25,20 @@ result = engine.discover(graph)
 print(f"\nPTMT: {result.n_zones} zones, {len(result.counts)} motif types, "
       f"{result.total_processes()} processes (overflow={result.overflow})")
 
-# a second same-shaped run dispatches straight to the cached executable
+# a second same-shaped run dispatches straight to the cached executables
+# (one per bucket shape) and skips host-side planning via the plan cache
 engine.discover(graph)
-print(f"engine reuse: {engine.stats.compile_cache_hits} warm call(s), "
-      f"{engine.stats.compile_cache_misses} compile(s)")
+print(f"engine reuse: {engine.stats.compile_cache_hits} warm bucket "
+      f"dispatch(es), {engine.stats.compile_cache_misses} compile(s), "
+      f"{engine.stats.plan_cache_hits} zone-plan cache hit(s)")
+
+# --- zone-batch layout: how the device batch was actually shaped -----------
+lay = result.layout
+print(f"zone layout: {lay['kind']}, {len(lay['buckets'])} bucket(s), "
+      f"padding_ratio={lay['padding_ratio']:.1%}")
+for b in lay["buckets"]:
+    print(f"  {b['label']}: {b['real_zones']} zones x cap {b['e_cap']} "
+          f"({b['occupancy']:.1%} occupied)")
 
 # --- exactness: matches the unpartitioned sequential baseline --------------
 seq = engine.sequential(graph)

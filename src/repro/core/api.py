@@ -40,6 +40,10 @@ class DiscoveryResult:
     overflow: int                   # edges dropped by zone capacity (0 = exact)
     delta: int
     l_max: int
+    #: device zone-batch layout summary (``ZoneBatchLayout.summary()``):
+    #: kind, padding_ratio, per-bucket occupancy.  None for paths that do
+    #: not build a layout (e.g. streaming snapshots' merged totals).
+    layout: dict | None = None
 
     def tree(self) -> transitions.TransitionTree:
         return transitions.build_tree(self.counts)
@@ -52,12 +56,12 @@ class DiscoveryResult:
 
 
 def counts_to_result(counts, *, n_zones, e_cap, overflow, delta,
-                     l_max) -> DiscoveryResult:
+                     l_max, layout=None) -> DiscoveryResult:
     """Render a device :class:`CodeCounts` into a :class:`DiscoveryResult`."""
     count_dict = transitions.device_counts_to_dict(counts)
     return DiscoveryResult(
         counts=count_dict, n_zones=n_zones, e_cap=e_cap, overflow=overflow,
-        delta=delta, l_max=l_max,
+        delta=delta, l_max=l_max, layout=layout,
     )
 
 

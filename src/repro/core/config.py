@@ -36,6 +36,7 @@ from typing import Any
 
 from . import backends
 from .executor import AGG_MODES
+from .tzp import ZONE_LAYOUTS
 
 __all__ = ["MiningConfig"]
 
@@ -56,6 +57,11 @@ _CLI_HELP = {
                         "memory budget (core.planner) instead of hints",
     "allow_overflow": "mine even if the zone batch dropped edges beyond "
                       "e_cap (counts then undercount; default: error)",
+    "zone_layout": "device zone-batch layout: 'bucketed' groups zones into "
+                   "power-of-two e_cap buckets (less padding sweep work on "
+                   "skewed zone sizes), 'dense' pads every zone to the "
+                   "global max, 'auto' buckets only when sizes span more "
+                   "than one bucket",
 }
 
 
@@ -83,6 +89,7 @@ class MiningConfig:
     merge_cap: int | None = None
     memory_budget_mb: float | None = None
     allow_overflow: bool = False
+    zone_layout: str = "auto"
 
     def __post_init__(self):
         # frozen dataclass: normalize via object.__setattr__ before the
@@ -132,6 +139,10 @@ class MiningConfig:
         if self.agg not in AGG_MODES:
             raise ValueError(
                 f"unknown agg mode {self.agg!r}; one of {AGG_MODES}")
+        if self.zone_layout not in ZONE_LAYOUTS:
+            raise ValueError(
+                f"unknown zone layout {self.zone_layout!r}; one of "
+                f"{ZONE_LAYOUTS}")
         # resolves through the live registry so plugin backends validate
         # too; unknown names raise ValueError listing what is available
         backends.get_backend(self.backend)
@@ -217,6 +228,9 @@ class MiningConfig:
         parser.add_argument("--allow-overflow", action="store_true",
                             default=defaults["allow_overflow"],
                             help=_CLI_HELP["allow_overflow"])
+        parser.add_argument("--zone-layout", default=defaults["zone_layout"],
+                            choices=list(ZONE_LAYOUTS),
+                            help=_CLI_HELP["zone_layout"])
 
     @classmethod
     def from_cli_args(cls, args) -> "MiningConfig":

@@ -55,9 +55,13 @@ class EngineStats:
     sequential_calls: int = 0
     sharded_calls: int = 0
     stream_sessions: int = 0
-    compile_cache_hits: int = 0     # runs whose execution key was seen before
-    compile_cache_misses: int = 0   # runs that had to trace + compile
+    compile_cache_hits: int = 0     # bucket runs whose execution key was seen
+    compile_cache_misses: int = 0   # bucket runs that had to trace + compile
+    plan_cache_hits: int = 0        # discover calls that skipped plan_zones
+    plan_cache_misses: int = 0      # discover calls that ran Algorithm 1
     zones_mined: int = 0
+    padding_ratio: float = 0.0      # last layout's padded-slot waste
+    bucket_occupancy: dict = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -87,6 +91,14 @@ class PTMTEngine:
         self.stats = EngineStats()
         self._seen_keys: set[tuple] = set()
         self._mesh_steps: dict[tuple, object] = {}
+        # host-side zone-plan cache: (graph fingerprint, delta, l_max,
+        # omega, e_cap) -> ZonePlan.  Repeated discover on the same graph
+        # skips Algorithm 1's O(n) scan entirely (stats.plan_cache_hits).
+        # LRU-bounded: plans hold O(n_zones) arrays, and a long-lived
+        # engine iterating many distinct graphs must not grow without
+        # bound.
+        self._zone_plans: dict[tuple, tzp.ZonePlan] = {}
+        self._zone_plan_cap = 64
 
     @property
     def backend(self) -> str:
@@ -120,50 +132,88 @@ class PTMTEngine:
 
     # -- batch discovery ----------------------------------------------------
 
-    def _plan_and_batch(self, graph: TemporalGraph, n_shards: int = 1):
+    def plan_zones(self, graph: TemporalGraph) -> tzp.ZonePlan:
+        """Zone plan for ``graph``, memoized by graph fingerprint.
+
+        The cache key is ``(graph_fingerprint, delta, l_max, omega,
+        e_cap)`` — exactly the inputs Algorithm 1 depends on — so repeated
+        ``discover`` on the same stream skips host-side planning entirely.
+        ``ZonePlan.to_json``/``from_json`` round-trip exactly, so a plan
+        can also be persisted and re-attached out of process.
+        """
         cfg = self.config
+        key = (tzp.graph_fingerprint(graph), cfg.delta, cfg.l_max,
+               cfg.omega, cfg.e_cap)
+        plan = self._zone_plans.get(key)
+        if plan is not None:
+            self.stats.plan_cache_hits += 1
+            self._zone_plans[key] = self._zone_plans.pop(key)  # LRU bump
+            return plan
         plan = tzp.plan_zones(graph, delta=cfg.delta, l_max=cfg.l_max,
                               omega=cfg.omega, e_cap=cfg.e_cap)
+        self._zone_plans[key] = plan
+        while len(self._zone_plans) > self._zone_plan_cap:
+            self._zone_plans.pop(next(iter(self._zone_plans)))
+        self.stats.plan_cache_misses += 1
+        return plan
+
+    def _plan_and_layout(self, graph: TemporalGraph, n_shards: int = 1):
+        cfg = self.config
+        plan = self.plan_zones(graph)
         pad_zones = (self.executor.zone_chunk or 1) * n_shards
-        batch = tzp.build_zone_batch(graph, plan, e_cap=cfg.e_cap,
-                                     pad_zones_to=pad_zones,
-                                     n_shards=n_shards)
-        return plan, batch
+        layout = tzp.build_zone_layout(graph, plan, layout=cfg.zone_layout,
+                                       e_cap=cfg.e_cap,
+                                       pad_zones_to=pad_zones,
+                                       n_shards=n_shards)
+        return plan, layout
+
+    def _note_layout(self, layout: tzp.ZoneBatchLayout) -> None:
+        self.stats.padding_ratio = layout.padding_ratio
+        self.stats.bucket_occupancy = {
+            b.label or "dense": b.occupancy for b in layout.buckets}
 
     def discover(self, graph: TemporalGraph) -> DiscoveryResult:
         """PTMT parallel discovery (plan zones → expand → aggregate).
 
-        Repeated calls on same-shaped workloads dispatch to cached
-        executables (``stats.compile_cache_hits``).
+        The zone batch is laid out per ``config.zone_layout`` (size
+        buckets by default when zone sizes are skewed); repeated calls on
+        recurring bucket shapes dispatch to cached executables
+        (``stats.compile_cache_hits``) and repeated calls on the same
+        graph skip planning (``stats.plan_cache_hits``).
         """
         self.stats.discover_calls += 1
-        plan, batch = self._plan_and_batch(graph)
-        key = self.executor.execution_key(batch.n_zones, batch.e_cap)
-        counts = self.executor.run(
-            batch, allow_overflow=self.config.allow_overflow)
-        self._note_execution(key, batch.n_zones)
+        plan, layout = self._plan_and_layout(graph)
+        keys = self.executor.layout_execution_keys(layout)
+        counts = self.executor.run_layout(
+            layout, allow_overflow=self.config.allow_overflow)
+        for key, bucket in zip(keys, layout.buckets):
+            self._note_execution(key, bucket.n_zones)
+        self._note_layout(layout)
         return counts_to_result(
-            counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
-            overflow=batch.overflow, delta=self.config.delta,
-            l_max=self.config.l_max,
+            counts, n_zones=plan.n_zones, e_cap=layout.e_cap,
+            overflow=layout.overflow, delta=self.config.delta,
+            l_max=self.config.l_max, layout=layout.summary(),
         )
 
     def sequential(self, graph: TemporalGraph) -> DiscoveryResult:
         """TMC-analog baseline: one zone spanning the whole stream (no TZP).
 
-        The single-zone batch goes through the same
+        Always the dense layout (a single zone has nothing to bucket) —
+        the one-zone batch goes through the same
         :func:`~repro.core.tzp.build_zone_batch` padding policy as every
         other mode.
         """
         self.stats.sequential_calls += 1
         plan = tzp.single_zone_plan(graph, l_b=self.config.l_b)
-        batch = tzp.build_zone_batch(graph, plan)
+        layout = tzp.build_zone_layout(graph, plan, layout="dense")
+        batch = layout.buckets[0]
         key = self.executor.execution_key(batch.n_zones, batch.e_cap)
         counts = self.executor.run(batch)
         self._note_execution(key, batch.n_zones)
         return counts_to_result(
             counts, n_zones=1, e_cap=batch.e_cap, overflow=batch.overflow,
             delta=self.config.delta, l_max=self.config.l_max,
+            layout=layout.summary(),
         )
 
     # -- streaming ----------------------------------------------------------
@@ -195,17 +245,19 @@ class PTMTEngine:
         """Distributed discovery with zones sharded over ``mesh``.
 
         The jitted SPMD mining step is cached per ``(mesh, axes, out_cap,
-        merge_mode)`` — the previous per-call ``mine_on_mesh`` rebuilt (and
-        re-jitted) the step every invocation.
+        merge_mode)``; with a bucketed layout each bucket is sharded over
+        the mesh independently (its zones were round-robined across the
+        shard lanes at build time) and the replicated per-bucket tables
+        merge host-side through the same bounded carry as the local path.
         """
         from repro.distributed import mining as dist_mining
 
         self.stats.sharded_calls += 1
         axes = tuple(axes or mesh.axis_names)
         n_shards = int(np.prod([mesh.shape[a] for a in axes]))
-        plan, batch = self._plan_and_batch(graph, n_shards=n_shards)
-        MiningExecutor.check_batch_overflow(
-            batch, allow_overflow=self.config.allow_overflow)
+        plan, layout = self._plan_and_layout(graph, n_shards=n_shards)
+        MiningExecutor.check_layout_overflow(
+            layout, allow_overflow=self.config.allow_overflow)
 
         step_key = (mesh, axes, out_cap, merge_mode)
         fn = self._mesh_steps.get(step_key)
@@ -218,12 +270,17 @@ class PTMTEngine:
         # sharded executables are per SPMD step, not shared with the local
         # jit cache — key on the step too, or a first sharded call after a
         # same-shaped discover would misreport as a cache hit
-        key = (step_key,
-               self.executor.execution_key(batch.n_zones, batch.e_cap))
-        counts = dist_mining.run_mine_fn(fn, batch, out_cap=out_cap)
-        self._note_execution(key, batch.n_zones)
+        def note(bucket):
+            key = (step_key,
+                   self.executor.execution_key(bucket.n_zones, bucket.e_cap))
+            self._note_execution(key, bucket.n_zones)
+
+        counts = dist_mining.run_mine_layout(
+            fn, layout, out_cap=out_cap,
+            merge_cap=self.executor.merge_cap, on_bucket=note)
+        self._note_layout(layout)
         return counts_to_result(
-            counts, n_zones=plan.n_zones, e_cap=batch.e_cap,
-            overflow=batch.overflow, delta=self.config.delta,
-            l_max=self.config.l_max,
+            counts, n_zones=plan.n_zones, e_cap=layout.e_cap,
+            overflow=layout.overflow, delta=self.config.delta,
+            l_max=self.config.l_max, layout=layout.summary(),
         )

@@ -64,9 +64,54 @@ import jax.numpy as jnp
 
 from . import aggregation, backends, encoding, planner
 from .aggregation import CodeCounts
-from .tzp import ZoneBatch
+from .tzp import ZoneBatch, ZoneBatchLayout
 
 AGG_MODES = ("auto", "legacy", "hierarchical", "pipelined")
+
+
+def merge_partial_counts(
+    parts,
+    *,
+    merge_cap: int | None = None,
+    warn_label: str = "partial",
+) -> CodeCounts:
+    """Fold per-bucket (or per-shard) count tables through ``merge_bounded``.
+
+    The cross-bucket analog of the hierarchical chunk fold: partial tables
+    stream through one bounded-width carry instead of a single unbounded
+    concat-and-sort, so the resident merge state is O(cap) regardless of
+    how many buckets a layout produced.  ``merge_cap`` seeds the carry
+    width; a spill (more live unique codes than rows) is detected exactly
+    and retried with a doubled cap, capped at the provably-sufficient
+    ceiling (total live rows + 1 slot for the all-zero padding group), so
+    the result is always exact.
+    """
+    parts = list(parts)
+    if not parts:
+        raise ValueError("merge_partial_counts needs at least one table")
+    if len(parts) == 1:
+        return parts[0]
+    limbs = int(parts[0].codes.shape[1])
+    ceiling = sum(int(p.unique_mask.sum()) for p in parts) + 1
+    cap = min(int(merge_cap), ceiling) if merge_cap else ceiling
+    cap = max(cap, 8)
+    while True:
+        carry = aggregation.empty_counts(cap, limbs)
+        spilled = jnp.zeros((), jnp.int32)
+        for part in parts:
+            carry, spill = aggregation.merge_bounded(carry, part, cap=cap)
+            spilled = spilled + spill
+        n_spilled = int(spilled)
+        if n_spilled == 0:
+            return carry
+        need = max(2 * cap, cap + n_spilled, 8)
+        new_cap = min(1 << (need - 1).bit_length(), ceiling)
+        warnings.warn(
+            f"{warn_label} merge spilled {n_spilled} unique code(s) at "
+            f"merge_cap={cap}; retrying with merge_cap={new_cap}",
+            RuntimeWarning, stacklevel=3,
+        )
+        cap = new_cap
 
 
 class ZoneChunkError(ValueError):
@@ -410,8 +455,34 @@ class MiningExecutor:
         """
         if not batch.overflow:
             return
-        msg = (f"zone batch dropped {batch.overflow} edge(s) that "
+        where = f" (bucket {batch.label!r})" if batch.label else ""
+        msg = (f"zone batch{where} dropped {batch.overflow} edge(s) that "
                f"exceeded e_cap={batch.e_cap}; counts would silently "
+               f"undercount (raise e_cap, or shrink zones by planning "
+               f"with e_cap / a memory budget)")
+        if not allow_overflow:
+            raise ZoneOverflowError(msg)
+        warnings.warn(msg + " — continuing because allow_overflow=True",
+                      RuntimeWarning, stacklevel=3)
+
+    @staticmethod
+    def check_layout_overflow(layout: ZoneBatchLayout, *,
+                              allow_overflow: bool = False) -> None:
+        """One overflow policy across every bucket of a layout.
+
+        Aggregates the per-bucket tallies into a single
+        :class:`ZoneOverflowError` (or warning) that names each offending
+        bucket, so a truncated burst is attributable to its capacity class
+        instead of an anonymous global count.
+        """
+        bad = [b for b in layout.buckets if b.overflow]
+        if not bad:
+            return
+        detail = ", ".join(
+            f"{b.label or 'dense'}: {b.overflow} edge(s) beyond "
+            f"e_cap={b.e_cap}" for b in bad)
+        msg = (f"zone layout dropped {layout.overflow} edge(s) across "
+               f"{len(bad)} bucket(s) [{detail}]; counts would silently "
                f"undercount (raise e_cap, or shrink zones by planning "
                f"with e_cap / a memory budget)")
         if not allow_overflow:
@@ -428,9 +499,41 @@ class MiningExecutor:
         """
         self.check_batch_overflow(batch, allow_overflow=allow_overflow)
         return self.run_arrays(batch.u, batch.v, batch.t, batch.valid,
-                               batch.sign)
+                               batch.sign, label=batch.label)
 
-    def run_arrays(self, u, v, t, valid, signs) -> CodeCounts:
+    def run_layout(self, layout: ZoneBatchLayout, *,
+                   allow_overflow: bool = False) -> CodeCounts:
+        """Mine a :class:`ZoneBatchLayout` (dense or bucketed) exactly.
+
+        Each bucket runs through :meth:`run_arrays` with its own shape —
+        and hence its own budget-derived ``zone_chunk``/``merge_cap`` from
+        :meth:`capacity_plan`, keyed on the bucket's geometry rather than
+        the global max — then the per-bucket partial count tables fold
+        through the signed bounded-carry merge
+        (:func:`merge_partial_counts`).  Lemma 4.2's signed sum is
+        associative over zones, so the split is exact; the differential
+        tests assert dense == bucketed code-for-code.
+        """
+        self.check_layout_overflow(layout, allow_overflow=allow_overflow)
+        parts = [
+            self.run_arrays(b.u, b.v, b.t, b.valid, b.sign, label=b.label)
+            for b in layout.buckets
+        ]
+        return merge_partial_counts(parts, merge_cap=self.merge_cap,
+                                    warn_label="zone-layout bucket")
+
+    def layout_execution_keys(self, layout: ZoneBatchLayout) -> tuple:
+        """Per-bucket :meth:`execution_key` tuple for a layout.
+
+        Bucket shapes — not whole-layout shapes — key the jit caches, so
+        a recurring bucket geometry reuses its compiled executable even
+        when the surrounding layout (other buckets, zone totals) differs.
+        """
+        return tuple(self.execution_key(b.n_zones, b.e_cap)
+                     for b in layout.buckets)
+
+    def run_arrays(self, u, v, t, valid, signs, *,
+                   label: str = "") -> CodeCounts:
         """Mine raw [Z, E] zone arrays (+ [Z] signs) to signed code counts."""
         u, v, t, valid, signs = (np.asarray(x)
                                  for x in (u, v, t, valid, signs))
@@ -438,9 +541,12 @@ class MiningExecutor:
         zc = self._zone_chunk_for(z, e)
         if zc and zc < z and z % zc != 0:
             if self.pad_policy == "raise":
+                where = f" in bucket {label!r}" if label else ""
                 raise ZoneChunkError(
-                    f"zone count {z} is not divisible by zone_chunk {zc} "
-                    f"(pad_policy='raise')"
+                    f"zone count {z}{where} is not divisible by zone_chunk "
+                    f"{zc} (pad_policy='raise'); the trailing {z % zc} "
+                    f"zone(s) would need inert padding rows — pad the "
+                    f"batch (pad_policy='pad') or pick a divisor"
                 )
             pad = zc - z % zc
             pad_rows = lambda x: np.concatenate(

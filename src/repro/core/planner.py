@@ -162,6 +162,56 @@ def plan_capacity(
     )
 
 
+def plan_layout_capacity(
+    bucket_shapes,
+    *,
+    l_max: int,
+    memory_budget_mb: float,
+    mem_model: Callable[[int, int], int] | None = None,
+    merge_cap: int | None = None,
+) -> dict[tuple[int, int], CapacityPlan]:
+    """Per-bucket capacity plans for a size-bucketed zone layout.
+
+    ``bucket_shapes`` is a sequence of ``(n_zones, e_cap)`` pairs (see
+    ``ZoneBatchLayout.bucket_shapes``).  Each bucket's ``zone_chunk`` and
+    ``merge_cap`` are derived from its **own** edge capacity — the whole
+    point of the ragged layout: a quiet bucket with e_cap=64 fits far more
+    zones per chunk than the dense plan sized by the global max would
+    allow, so the device stays occupied instead of sweeping padding.
+    Duplicate shapes collapse to one plan.
+
+    Introspection/benchmark helper: at runtime the same per-bucket
+    derivation happens inside ``MiningExecutor.run_arrays`` via
+    ``capacity_plan`` (which memoizes :func:`plan_capacity` per bucket
+    geometry); this function mirrors it for offline what-if analysis
+    without building batches.
+    """
+    return {
+        shape: plan_capacity(
+            n_zones=shape[0], e_cap=shape[1], l_max=l_max,
+            memory_budget_mb=memory_budget_mb, mem_model=mem_model,
+            merge_cap=merge_cap,
+        )
+        for shape in dict.fromkeys(tuple(s) for s in bucket_shapes)
+    }
+
+
+def layout_peak_bytes(plans: dict[tuple[int, int], CapacityPlan]) -> int:
+    """Peak estimate of a bucketed run: buckets execute sequentially, so
+    the layout's peak is the worst single bucket, not the sum."""
+    return max((p.est_peak_bytes for p in plans.values()), default=0)
+
+
+def padded_sweep_slots(bucket_shapes) -> int:
+    """Padded pairwise sweep work ``sum(Z_b * e_cap_b**2)`` of a layout.
+
+    The dense layout's cost is ``Z * e_cap_max**2``; the ratio of the two
+    is the padding-waste model the zone-layout benchmark reports
+    (EXPERIMENTS.md §Zone batch layout).
+    """
+    return sum(int(z) * int(e) ** 2 for z, e in bucket_shapes)
+
+
 def suggest_e_cap(
     *,
     l_max: int,

@@ -41,10 +41,6 @@ from .executor import MiningExecutor
 from .temporal_graph import TemporalGraph
 
 
-def _next_pow2(x: int) -> int:
-    return 1 << max(x - 1, 1).bit_length()
-
-
 def _merge_into(total: dict[str, int], part: dict[str, int]) -> None:
     for code, cnt in part.items():
         new = total.get(code, 0) + cnt
@@ -162,15 +158,20 @@ class StreamingMiner:
         self.n_zones_finalized = 0
         self._epoch = 0
         self._closed_sig: tuple = (None, 0)
-        # epoch-keyed cache of the open-tail mining result: (epoch,
-        # tail_counts, tail_zones, tail_cap).  snapshot() is a pure
-        # function of the closed prefix and the epoch bumps exactly when
-        # that prefix changes, so reuse is exact — the finalized partial
-        # counts in self._counts are never re-mined, and between
-        # finalizations the tail is not either.
+        # cache of the open-tail mining result, keyed by (epoch, layout
+        # signature): (epoch, sig, tail_counts, tail_zones, tail_cap).
+        # snapshot() is a pure function of the closed prefix and the
+        # epoch bumps exactly when that prefix changes, so reuse is exact
+        # — the finalized partial counts in self._counts are never
+        # re-mined, and between finalizations the tail is not either.
+        # The signature covers every setting that shapes the tail's zone
+        # layout (layout kind, e_cap, chunking), so a bucket-affecting
+        # change invalidates the cached mine instead of serving a result
+        # computed under a different layout.
         self._tail_cache: tuple | None = None
         self.tail_cache_hits = 0
         self.tail_cache_misses = 0
+        self.last_tail_layout: dict | None = None
 
     # -- stream state -------------------------------------------------------
 
@@ -268,7 +269,18 @@ class StreamingMiner:
             self._s = new_s
 
     def _finalize_pair(self, s: int, e: int, lo: int) -> None:
-        """Mine G = [s, e) with sign +1 and B = [e - l_b, e) with sign -1."""
+        """Mine G = [s, e) with sign +1 and B = [e - l_b, e) with sign -1.
+
+        The pair goes through the same :func:`tzp.build_zone_layout` →
+        :meth:`MiningExecutor.run_layout` pipeline as batch discovery — a
+        two-zone plan over the pair's edge slice — but always as the
+        **dense** layout: a 2-row batch has almost nothing to bucket,
+        while splitting G and B into separate capacity buckets doubles
+        the per-pair dispatches, adds a host-synced cross-bucket merge,
+        and multiplies the distinct jit shapes on the ingest hot path
+        (measured ~1.6× slower warm, far worse cold).  The multi-zone
+        tail mine is where the configured layout pays off.
+        """
         hi = int(np.searchsorted(self._t, e, side="left"))
         b_lo = int(np.searchsorted(self._t, e - self.l_b, side="left"))
         g_cnt = hi - lo
@@ -276,24 +288,30 @@ class StreamingMiner:
         if g_cnt == 0:
             self.n_zones_finalized += 2
             return
-        # pad per-zone capacity to a power of two so jit shapes stabilize
-        cap = _next_pow2(max(g_cnt, 8))
-        shape = (2, cap)
-        u = np.zeros(shape, np.int32)
-        v = np.zeros(shape, np.int32)
-        t = np.zeros(shape, np.int32)
-        valid = np.zeros(shape, bool)
         # rebase timestamps to the pair start so the int32 device batch
         # never overflows (counts are shift-invariant, only gaps matter)
-        t_base = self._t[lo]
-        for row, (zlo, cnt) in enumerate(((lo, g_cnt), (b_lo, b_cnt))):
-            tzp.fill_zone_row(
-                u[row], v[row], t[row], valid[row],
-                self._u[zlo:zlo + cnt], self._v[zlo:zlo + cnt],
-                self._t[zlo:zlo + cnt] - t_base,
-            )
-        signs = np.array([1, -1], np.int32)
-        counts = self.executor.run_arrays(u, v, t, valid, signs)
+        t_base = int(self._t[lo])
+        pair = TemporalGraph(
+            u=self._u[lo:hi], v=self._v[lo:hi],
+            t=(self._t[lo:hi] - t_base).astype(np.int32),
+            n_nodes=int(max(self._u[lo:hi].max(initial=-1),
+                            self._v[lo:hi].max(initial=-1)) + 1),
+        )
+        plan = tzp.ZonePlan(
+            lo=np.asarray([0, b_lo - lo], np.int64),
+            count=np.asarray([g_cnt, b_cnt], np.int64),
+            sign=np.asarray([1, -1], np.int32),
+            t_start=np.asarray([s - t_base, e - self.l_b - t_base],
+                               np.int64),
+            t_end=np.asarray([e - t_base, e - t_base], np.int64),
+            l_b=self.l_b,
+        )
+        # cap at a power of two so jit shapes stabilize across pairs
+        layout = tzp.build_zone_layout(
+            pair, plan, layout="dense",
+            e_cap=tzp.next_pow2(max(g_cnt, 8)),
+        )
+        counts = self.executor.run_layout(layout)
         _merge_into(self._counts, transitions.device_counts_to_dict(counts))
         self.n_zones_finalized += 2
 
@@ -312,25 +330,45 @@ class StreamingMiner:
         """
         counts = dict(self._counts)
         n_zones = self.n_zones_finalized
+        sig = self._tail_sig()
         if not final and self._tail_cache is not None \
-                and self._tail_cache[0] == self._epoch:
+                and self._tail_cache[:2] == (self._epoch, sig):
             self.tail_cache_hits += 1
-            _, tail_counts, tail_zones, tail_cap = self._tail_cache
+            _, _, tail_counts, tail_zones, tail_cap = self._tail_cache
         else:
             tail_counts, tail_zones, tail_cap = self._mine_tail(final)
             if not final:
                 self.tail_cache_misses += 1
-                self._tail_cache = (self._epoch, tail_counts, tail_zones,
-                                    tail_cap)
+                self._tail_cache = (self._epoch, sig, tail_counts,
+                                    tail_zones, tail_cap)
         _merge_into(counts, tail_counts)
         return DiscoveryResult(
             counts=counts, n_zones=n_zones + tail_zones, e_cap=tail_cap,
             overflow=0, delta=self.delta, l_max=self.l_max,
         )
 
+    def _tail_sig(self) -> tuple:
+        """Settings that shape the tail's zone layout (cache invalidation).
+
+        Defensive: every component is fixed at construction today (the
+        config is frozen), so within one miner the signature only restates
+        the epoch key.  It exists to pin the contract — the cached tail
+        mine is only valid for the layout settings it was computed under —
+        so a future mutable setting (or a subclass) cannot silently serve
+        a mine computed under a different bucket decomposition.
+        """
+        return (self.config.zone_layout, self.e_cap,
+                self.executor.zone_chunk)
+
     def _mine_tail(self, final: bool) -> tuple[dict[str, int], int, int]:
         """Mine the not-yet-finalized tail of the closed prefix (or, with
-        ``final``, the whole buffer); returns (counts, n_zones, e_cap)."""
+        ``final``, the whole buffer); returns (counts, n_zones, e_cap).
+
+        The tail flows through the same plan → :func:`tzp.
+        build_zone_layout` → :meth:`MiningExecutor.run_layout` pipeline as
+        batch discovery, so streaming inherits the size-bucketed layout
+        (``self.last_tail_layout`` records the decomposition used).
+        """
         if self._t.size == 0:
             return {}, 0, 0
         if final:
@@ -351,11 +389,12 @@ class StreamingMiner:
             tail, delta=self.delta, l_max=self.l_max,
             omega=self.omega, e_cap=self.e_cap,
         )
-        batch = tzp.build_zone_batch(
-            tail, plan,
+        layout = tzp.build_zone_layout(
+            tail, plan, layout=self.config.zone_layout,
             pad_zones_to=self.executor.zone_chunk or 1,
             pad_edges_to=64,
         )
-        tail_counts = self.executor.run(batch)
+        tail_counts = self.executor.run_layout(layout)
+        self.last_tail_layout = layout.summary()
         return (transitions.device_counts_to_dict(tail_counts),
-                plan.n_zones, batch.e_cap)
+                plan.n_zones, layout.e_cap)

@@ -18,6 +18,8 @@ device-side batch is built once per mining run.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
+import json
 
 import numpy as np
 
@@ -46,6 +48,60 @@ class ZonePlan:
     @property
     def max_count(self) -> int:
         return int(self.count.max()) if self.n_zones else 0
+
+    # -- serialization (the engine-level zone-plan cache persists plans) ----
+
+    def to_json(self) -> str:
+        """Exact JSON round-trip (``from_json(to_json(p)) == p``)."""
+        return json.dumps({
+            "lo": self.lo.tolist(),
+            "count": self.count.tolist(),
+            "sign": self.sign.tolist(),
+            "t_start": self.t_start.tolist(),
+            "t_end": self.t_end.tolist(),
+            "l_b": self.l_b,
+        }, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, data: str | bytes | dict) -> "ZonePlan":
+        """Inverse of :meth:`to_json`; also accepts an already-parsed dict."""
+        if not isinstance(data, dict):
+            data = json.loads(data)
+        known = {"lo", "count", "sign", "t_start", "t_end", "l_b"}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown ZonePlan field(s) {unknown}; known: {sorted(known)}")
+        return cls(
+            lo=np.asarray(data["lo"], np.int64),
+            count=np.asarray(data["count"], np.int64),
+            sign=np.asarray(data["sign"], np.int32),
+            t_start=np.asarray(data["t_start"], np.int64),
+            t_end=np.asarray(data["t_end"], np.int64),
+            l_b=int(data["l_b"]),
+        )
+
+    def __eq__(self, other) -> bool:
+        if not isinstance(other, ZonePlan):
+            return NotImplemented
+        return self.l_b == other.l_b and all(
+            np.array_equal(getattr(self, f), getattr(other, f))
+            for f in ("lo", "count", "sign", "t_start", "t_end"))
+
+
+def graph_fingerprint(graph: TemporalGraph) -> str:
+    """Cheap content hash of a temporal graph (zone-plan cache key part).
+
+    Hashes the raw edge arrays, so two graphs with identical streams share
+    a fingerprint regardless of object identity.  O(n) but vastly cheaper
+    than re-running Algorithm 1's zone scan; the engine memoizes plans
+    under ``(fingerprint, delta, l_max, omega, e_cap)``.
+    """
+    h = hashlib.blake2b(digest_size=16)
+    h.update(np.int64(graph.n_edges).tobytes())
+    for arr in (graph.u, graph.v, graph.t):
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
 
 
 def adaptive_zone_end(t: np.ndarray, s: int, e: int, *, e_cap: int | None,
@@ -178,6 +234,7 @@ class ZoneBatch:
     sign: np.ndarray      # int32[Z]
     perm: np.ndarray      # int64[Z] original zone index per row
     overflow: int         # edges dropped because a zone exceeded e_cap
+    label: str = ""       # bucket name in a ZoneBatchLayout ("" = dense)
 
     @property
     def n_zones(self) -> int:
@@ -187,9 +244,41 @@ class ZoneBatch:
     def e_cap(self) -> int:
         return int(self.u.shape[1])
 
+    @property
+    def n_real_zones(self) -> int:
+        """Rows carrying a planned zone (``perm >= 0``; the rest are pad)."""
+        return int((self.perm >= 0).sum())
+
+    @property
+    def valid_edges(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def padded_slots(self) -> int:
+        """Total device edge slots, real or padding (``Z * e_cap``)."""
+        return self.n_zones * self.e_cap
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of edge slots holding real edges (1 - padding waste)."""
+        return self.valid_edges / max(self.padded_slots, 1)
+
 
 def _round_up(x: int, mult: int) -> int:
     return ((x + mult - 1) // mult) * mult
+
+
+def dense_cap(plan: ZonePlan, *, e_cap: int | None = None,
+              pad_edges_to: int = 8) -> int:
+    """The dense layout's per-zone edge capacity for ``plan``.
+
+    The single copy of the rule — :func:`build_zone_batch`,
+    :func:`resolve_layout` and :func:`build_zone_layout` must all agree on
+    it, or dense and bucketed layouts would clip (and overflow) at
+    different capacities.
+    """
+    cap = e_cap or plan.max_count
+    return max(_round_up(max(cap, 1), pad_edges_to), pad_edges_to)
 
 
 def build_zone_batch(
@@ -200,11 +289,11 @@ def build_zone_batch(
     pad_zones_to: int = 1,
     pad_edges_to: int = 8,
     n_shards: int = 1,
+    label: str = "",
 ) -> ZoneBatch:
     """Gather zones into a padded [Z, e_cap] batch with validity masks."""
     z = plan.n_zones
-    cap = e_cap or plan.max_count
-    cap = max(_round_up(max(cap, 1), pad_edges_to), pad_edges_to)
+    cap = dense_cap(plan, e_cap=e_cap, pad_edges_to=pad_edges_to)
     z_pad = max(_round_up(max(z, 1), pad_zones_to), pad_zones_to)
 
     # static load balance: biggest zones first, dealt round-robin over shards
@@ -233,4 +322,218 @@ def build_zone_batch(
         sign[row] = plan.sign[zi]
         perm[row] = zi
     return ZoneBatch(u=u, v=v, t=t, valid=valid, sign=sign, perm=perm,
-                     overflow=overflow)
+                     overflow=overflow, label=label)
+
+
+# ---------------------------------------------------------------------------
+# Ragged zone batching: size-bucketed layouts.
+# ---------------------------------------------------------------------------
+
+ZONE_LAYOUTS = ("auto", "dense", "bucketed")
+
+
+def next_pow2(x: int) -> int:
+    """Smallest power of two >= ``x`` (1 for x <= 1).
+
+    The one copy of the bucket-capacity rounding rule — the streaming
+    frontier and the bucketed layout must agree on it, or the same zone
+    would land on different jit shapes depending on the path.
+    """
+    return 1 << max(int(x) - 1, 0).bit_length() if x > 1 else 1
+
+
+def bucket_caps(counts: np.ndarray, *, max_cap: int,
+                pad_edges_to: int = 8) -> np.ndarray:
+    """Per-zone bucket capacity: power-of-two ceil, aligned to
+    ``pad_edges_to``, clipped to ``max_cap``.
+
+    The floor is ``pad_edges_to`` rounded up to a power of two, so the
+    quietest zones still land on device-friendly row widths; aligning to
+    ``pad_edges_to`` afterwards keeps each bucket's grouping key equal to
+    the ``e_cap`` :func:`build_zone_batch` will actually allocate (for a
+    non-power-of-two ``pad_edges_to``, a raw pow2 cap would be re-rounded
+    there, merging buckets and mislabeling them); the clip keeps the top
+    bucket exactly the dense capacity, so a zone that would overflow the
+    dense batch overflows the bucketed one by the same edge count
+    (identical ``overflow`` semantics across layouts).
+    """
+    floor = next_pow2(max(int(pad_edges_to), 1))
+    caps = np.asarray(
+        [next_pow2(max(int(c), 1)) for c in np.asarray(counts)], np.int64)
+    caps = np.maximum(caps, floor)
+    caps = (caps + pad_edges_to - 1) // pad_edges_to * pad_edges_to
+    return np.clip(caps, None, max_cap)
+
+
+@dataclasses.dataclass(frozen=True)
+class ZoneBatchLayout:
+    """A zone batch as one or more size-bucketed :class:`ZoneBatch` pieces.
+
+    ``kind`` is ``"dense"`` (one bucket at the global capacity — the seed
+    layout, kept as the differential oracle and for tiny plans) or
+    ``"bucketed"`` (zones grouped into power-of-two ``e_cap`` buckets so
+    quiet zones stop paying a bursty zone's dense O(e_cap²) sweep).
+    Buckets are ordered by ascending capacity and each is a self-contained
+    padded batch; signed aggregation is associative over zones (Lemma 4.2),
+    so mining buckets independently and merging the partial count tables is
+    exact.
+    """
+
+    kind: str
+    buckets: tuple[ZoneBatch, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_zones(self) -> int:
+        """Planned (real) zones across buckets — pad rows excluded."""
+        return sum(b.n_real_zones for b in self.buckets)
+
+    @property
+    def overflow(self) -> int:
+        return sum(b.overflow for b in self.buckets)
+
+    @property
+    def e_cap(self) -> int:
+        """Largest bucket capacity (== the dense capacity by construction)."""
+        return max((b.e_cap for b in self.buckets), default=0)
+
+    @property
+    def valid_edges(self) -> int:
+        return sum(b.valid_edges for b in self.buckets)
+
+    @property
+    def padded_slots(self) -> int:
+        return sum(b.padded_slots for b in self.buckets)
+
+    @property
+    def padding_ratio(self) -> float:
+        """Fraction of device edge slots that are padding (wasted work)."""
+        slots = self.padded_slots
+        return 1.0 - self.valid_edges / slots if slots else 0.0
+
+    @property
+    def sweep_slots(self) -> int:
+        """Padded pairwise sweep work — the dense O(e_cap²) cost model the
+        bucketing attacks.  One formula, owned by the planner
+        (:func:`repro.core.planner.padded_sweep_slots`)."""
+        from . import planner
+
+        return planner.padded_sweep_slots(self.bucket_shapes())
+
+    def bucket_shapes(self) -> tuple[tuple[int, int], ...]:
+        """Per-bucket ``(n_zones, e_cap)`` — the compile-cache geometry."""
+        return tuple((b.n_zones, b.e_cap) for b in self.buckets)
+
+    def summary(self) -> dict:
+        """JSON-able layout description (benchmarks, ``engine.stats``)."""
+        return {
+            "kind": self.kind,
+            "n_zones": self.n_zones,
+            "padding_ratio": self.padding_ratio,
+            "buckets": [
+                {
+                    "label": b.label,
+                    "e_cap": b.e_cap,
+                    "n_zones": b.n_zones,
+                    "real_zones": b.n_real_zones,
+                    "valid_edges": b.valid_edges,
+                    "occupancy": b.occupancy,
+                }
+                for b in self.buckets
+            ],
+        }
+
+
+def _select_plan(plan: ZonePlan, idx: np.ndarray) -> ZonePlan:
+    return ZonePlan(lo=plan.lo[idx], count=plan.count[idx],
+                    sign=plan.sign[idx], t_start=plan.t_start[idx],
+                    t_end=plan.t_end[idx], l_b=plan.l_b)
+
+
+def resolve_layout(plan: ZonePlan, layout: str, *, e_cap: int | None = None,
+                   pad_edges_to: int = 8) -> str:
+    """Resolve ``"auto"`` to a concrete layout kind for ``plan``.
+
+    ``auto`` picks ``bucketed`` only when the plan's zone sizes actually
+    span more than one bucket — a uniform (or tiny) plan gains nothing
+    from bucketing and the dense layout keeps one executable shape.
+    """
+    if layout not in ZONE_LAYOUTS:
+        raise ValueError(
+            f"unknown zone layout {layout!r}; one of {ZONE_LAYOUTS}")
+    if layout != "auto":
+        return layout
+    if plan.n_zones < 2:
+        return "dense"
+    counts = np.asarray(plan.count)
+    if (counts == 0).any():
+        # the bucketed layout drops empty zones outright — always a win
+        return "bucketed"
+    caps = bucket_caps(counts,
+                       max_cap=dense_cap(plan, e_cap=e_cap,
+                                         pad_edges_to=pad_edges_to),
+                       pad_edges_to=pad_edges_to)
+    return "bucketed" if len(np.unique(caps)) > 1 else "dense"
+
+
+def build_zone_layout(
+    graph: TemporalGraph,
+    plan: ZonePlan,
+    *,
+    layout: str = "auto",
+    e_cap: int | None = None,
+    pad_zones_to: int = 1,
+    pad_edges_to: int = 8,
+    n_shards: int = 1,
+) -> ZoneBatchLayout:
+    """Build a device layout for ``plan`` — dense or size-bucketed.
+
+    The bucketed layout groups zones whose edge population rounds up to the
+    same power-of-two capacity into one padded batch per bucket (largest
+    bucket capped at the dense capacity, so overflow is layout-invariant).
+    Empty zones are dropped outright — a zone with no edges seeds no
+    candidates, so its signed contribution is identically zero (quiet-gap
+    plans routinely carry thousands of them, all padding under the dense
+    layout).  Zone ordering inside a bucket keeps
+    :func:`build_zone_batch`'s static load balancing (descending size,
+    round-robin over ``n_shards``), and ``perm`` is remapped to the
+    original plan's zone indices.
+    """
+    kind = resolve_layout(plan, layout, e_cap=e_cap,
+                          pad_edges_to=pad_edges_to)
+    if kind == "dense":
+        dense = build_zone_batch(
+            graph, plan, e_cap=e_cap, pad_zones_to=pad_zones_to,
+            pad_edges_to=pad_edges_to, n_shards=n_shards, label="dense")
+        return ZoneBatchLayout(kind="dense", buckets=(dense,))
+
+    max_cap = dense_cap(plan, e_cap=e_cap, pad_edges_to=pad_edges_to)
+    nonempty = np.flatnonzero(np.asarray(plan.count) > 0)
+    if nonempty.size == 0:
+        # all-empty plan: one inert bucket so the executor still has a
+        # (zero-candidate) batch to run — counts come out empty, exactly.
+        # Zone padding/sharding kwargs still apply: a mesh path must be
+        # able to partition even an empty batch's zone axis.
+        inert = build_zone_batch(
+            graph, _select_plan(plan, nonempty), e_cap=pad_edges_to,
+            pad_zones_to=pad_zones_to, pad_edges_to=pad_edges_to,
+            n_shards=n_shards, label=f"cap{pad_edges_to}")
+        return ZoneBatchLayout(kind="bucketed", buckets=(inert,))
+    caps = bucket_caps(plan.count[nonempty], max_cap=max_cap,
+                       pad_edges_to=pad_edges_to)
+    buckets = []
+    for cap in sorted(int(c) for c in np.unique(caps)):
+        idx = nonempty[np.flatnonzero(caps == cap)]
+        sub = _select_plan(plan, idx)
+        batch = build_zone_batch(
+            graph, sub, e_cap=cap, pad_zones_to=pad_zones_to,
+            pad_edges_to=pad_edges_to, n_shards=n_shards,
+            label=f"cap{cap}")
+        # remap perm from sub-plan rows back to the original zone indices
+        perm = np.where(batch.perm >= 0,
+                        idx[np.clip(batch.perm, 0, len(idx) - 1)], -1)
+        buckets.append(dataclasses.replace(batch, perm=perm))
+    return ZoneBatchLayout(kind="bucketed", buckets=tuple(buckets))

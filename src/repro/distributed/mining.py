@@ -27,7 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation
 from repro.core.aggregation import CodeCounts
-from repro.core.executor import MiningExecutor
+from repro.core.executor import MiningExecutor, merge_partial_counts
 
 from .collectives import shard_map_compat
 
@@ -169,6 +169,72 @@ def run_mine_fn(fn, batch, *, out_cap: int = 65536) -> CodeCounts:
             f"merge_cap"
         )
     return counts
+
+
+def run_mine_layout(fn, layout, *, out_cap: int = 65536,
+                    merge_cap: int | None = None,
+                    on_bucket=None) -> CodeCounts:
+    """Drive a built SPMD step over every bucket of a layout and merge.
+
+    The single copy of the per-bucket shard policy: each bucket runs
+    through :func:`run_mine_fn` (``jax.jit`` re-specializes per bucket
+    shape and caches), then the replicated partial tables fold through the
+    bounded signed carry.  ``on_bucket(bucket)`` is invoked after each
+    bucket's run — :meth:`repro.core.engine.PTMTEngine.sharded` uses it to
+    record per-bucket execution keys.  Callers enforce the overflow policy
+    (``MiningExecutor.check_layout_overflow``) before building device
+    batches.
+    """
+    parts = []
+    for bucket in layout.buckets:
+        parts.append(run_mine_fn(fn, bucket, out_cap=out_cap))
+        if on_bucket is not None:
+            on_bucket(bucket)
+    return merge_partial_counts(parts, merge_cap=merge_cap,
+                                warn_label="sharded bucket")
+
+
+def mine_layout_on_mesh(
+    layout,
+    mesh: jax.sharding.Mesh,
+    axes: tuple[str, ...],
+    *,
+    executor: MiningExecutor | None = None,
+    config=None,
+    delta: int | None = None,
+    l_max: int | None = None,
+    backend: str = "ref",
+    zone_chunk: int | None = None,
+    agg: str = "auto",
+    merge_cap: int | None = None,
+    out_cap: int = 65536,
+    merge_mode: str = "flat",
+    allow_overflow: bool = False,
+) -> CodeCounts:
+    """Distributed discovery over a host-built ``ZoneBatchLayout``.
+
+    Sharding is **per bucket**: each size bucket's zone axis is sharded
+    over the mesh independently (its zones were round-robined across the
+    shard lanes at build time, so the static load balance holds within
+    every capacity class), one SPMD step serves every bucket (``jax.jit``
+    re-specializes per bucket shape and caches — recurring bucket
+    geometries reuse executables), and the replicated per-bucket count
+    tables fold through the bounded signed carry
+    (:func:`repro.core.executor.merge_partial_counts`) host-side.  Build
+    the layout with ``n_shards = prod(mesh axis sizes)`` so every bucket's
+    zone count divides the shard count.  Layouts that dropped edges raise
+    :class:`~repro.core.executor.ZoneOverflowError` (same policy as the
+    local ``run_layout``) unless ``allow_overflow=True``.
+    """
+    ex = _as_executor(executor, delta=delta, l_max=l_max, backend=backend,
+                      zone_chunk=zone_chunk, agg=agg, merge_cap=merge_cap,
+                      config=config)
+    MiningExecutor.check_layout_overflow(layout,
+                                         allow_overflow=allow_overflow)
+    fn = make_mine_step(mesh, axes, executor=ex, out_cap=out_cap,
+                        merge_mode=merge_mode)
+    return run_mine_layout(fn, layout, out_cap=out_cap,
+                           merge_cap=ex.merge_cap)
 
 
 def mine_on_mesh(

@@ -40,6 +40,11 @@ def _print_result(res, dt: float, label: str) -> None:
     print(f"{label}: {res.n_zones} zones (cap {res.e_cap}), "
           f"{len(res.counts)} motif types, "
           f"{res.total_processes()} processes in {dt:.2f}s")
+    if res.layout:
+        buckets = ", ".join(f"{b['label']}×{b['real_zones']}"
+                            for b in res.layout["buckets"])
+        print(f"zone layout: {res.layout['kind']} [{buckets}], "
+              f"padding_ratio={res.layout['padding_ratio']:.1%}")
     print("level histogram:", dict(sorted(res.level_histogram().items())))
     print("\ntransition tree (top levels):")
     tree = res.tree()
@@ -66,6 +71,9 @@ def _summary(args, config: MiningConfig, graph, res, dt: float, mode: str,
         "edges_per_s": graph.n_edges / dt if dt else 0.0,
         "n_zones": res.n_zones,
         "zone_e_cap": res.e_cap,
+        # resolved device layout (the config's ``zone_layout`` above is the
+        # *requested* kind; this is what the run actually built)
+        "layout": res.layout,
         "overflow": res.overflow,
         "motif_types": len(res.counts),
         "total_processes": res.total_processes(),

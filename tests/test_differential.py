@@ -165,6 +165,109 @@ def test_mesh_hierarchical_matches_single_device():
 
 
 # ---------------------------------------------------------------------------
+# Ragged zone layouts: bucketed == dense == oracle, every backend.
+# ---------------------------------------------------------------------------
+
+
+def _powerlaw_bursty(seed, n=220, nodes=9):
+    """Power-law burst sizes + quiet gaps: zone sizes span several
+    power-of-two buckets (the skew regime the bucketed layout targets)."""
+    rng = np.random.default_rng(seed)
+    us, vs, ts = [], [], []
+    now = 0
+    while len(ts) < n:
+        burst = min(int(rng.pareto(0.9) * 3) + 1, 70)
+        group = rng.integers(0, nodes, size=max(2, burst // 4 + 2))
+        for _ in range(burst):
+            a, b = rng.choice(group, 2, replace=True)
+            us.append(a)
+            vs.append(b)
+            ts.append(now + int(rng.integers(0, 30)))
+        now += int(rng.integers(150, 700))
+    return from_edges(np.asarray(us[:n]), np.asarray(vs[:n]),
+                      np.asarray(ts[:n]))
+
+
+def _layout_counts(g, *, backend, layout, zone_chunk, delta, l_max, omega,
+                   e_cap=None, agg="auto"):
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=omega,
+                          e_cap=e_cap)
+    lay = tzp.build_zone_layout(g, plan, layout=layout, e_cap=e_cap)
+    ex = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                        zone_chunk=zone_chunk, agg=agg)
+    return lay, _dict(ex.run_layout(lay, allow_overflow=True))
+
+
+def test_bursty_corpus_spans_three_buckets():
+    """Guard: the layout-differential corpus really exercises >= 3 buckets
+    (otherwise the bucketed-vs-dense comparison degenerates)."""
+    g = _powerlaw_bursty(seed=5)
+    plan = tzp.plan_zones(g, delta=12, l_max=3, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    assert lay.n_buckets >= 3, lay.bucket_shapes()
+    assert lay.padding_ratio < tzp.build_zone_layout(
+        g, plan, layout="dense").padding_ratio
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("zone_chunk", [0, 4])
+def test_bucketed_matches_dense_and_oracle(backend, zone_chunk):
+    """bucketed == dense == standalone numpy oracle through the full
+    plan -> layout -> run_layout path, chunked and unchunked."""
+    g = _powerlaw_bursty(seed=5)
+    delta, l_max, omega = 12, 3, 2
+    dense_lay, dense = _layout_counts(
+        g, backend=backend, layout="dense", zone_chunk=zone_chunk,
+        delta=delta, l_max=l_max, omega=omega)
+    buck_lay, bucketed = _layout_counts(
+        g, backend=backend, layout="bucketed", zone_chunk=zone_chunk,
+        delta=delta, l_max=l_max, omega=omega)
+    assert buck_lay.n_buckets >= 3
+    assert bucketed == dense, f"bucketed != dense on {backend}"
+    assert buck_lay.overflow == dense_lay.overflow == 0
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    assert bucketed == expect, f"{backend} bucketed != oracle"
+
+
+@pytest.mark.parametrize("layout", ["dense", "bucketed"])
+def test_layout_survives_tiny_merge_cap_retry(layout):
+    """The cross-bucket bounded-carry merge must converge to exact counts
+    from any starting cap (spill -> warn -> doubled-cap retry)."""
+    g = _powerlaw_bursty(seed=8, n=160)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout=layout)
+    base = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=0)
+    tiny = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2,
+                          agg="hierarchical", merge_cap=8)
+    with pytest.warns(RuntimeWarning, match="merge spilled"):
+        got = _dict(tiny.run_layout(lay))
+    assert got == _dict(base.run_layout(
+        tzp.build_zone_layout(g, plan, layout="dense")))
+
+
+def test_layout_overflow_names_offending_bucket():
+    """Edge-dropping buckets are named in the one layout-wide error."""
+    g, delta, l_max = _overflowing_setup()
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2, e_cap=16)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed", e_cap=16)
+    assert lay.overflow > 0
+    from repro.core import ZoneOverflowError
+
+    ex = MiningExecutor(delta=delta, l_max=l_max)
+    with pytest.raises(ZoneOverflowError, match=r"bucket.*cap16"):
+        ex.run_layout(lay)
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        got = ex.run_layout(lay, allow_overflow=True)
+    # overflow is layout-invariant: the dense batch drops the same edges
+    dense = tzp.build_zone_layout(g, plan, layout="dense", e_cap=16)
+    assert dense.overflow == lay.overflow
+    with pytest.warns(RuntimeWarning, match="dropped"):
+        dense_got = ex.run_layout(dense, allow_overflow=True)
+    assert _dict(got) == _dict(dense_got)
+
+
+# ---------------------------------------------------------------------------
 # Overflow must never masquerade as exact counts (regression).
 # ---------------------------------------------------------------------------
 

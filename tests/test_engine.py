@@ -73,11 +73,13 @@ def test_engine_overrides_and_config_reuse():
 def test_same_shape_discover_registers_compile_cache_hit():
     g = _graph()
     engine = PTMTEngine(CFG)
-    engine.discover(g)
+    res = engine.discover(g)
     misses = engine.stats.compile_cache_misses
+    n_buckets = len(res.layout["buckets"])
     assert engine.stats.compile_cache_hits == 0
+    assert misses == n_buckets       # one executable per bucket shape
     engine.discover(g)
-    assert engine.stats.compile_cache_hits == 1
+    assert engine.stats.compile_cache_hits == n_buckets
     assert engine.stats.compile_cache_misses == misses
     assert engine.stats.discover_calls == 2
 
@@ -192,7 +194,8 @@ def test_sharded_caches_mesh_step_and_matches_single_device():
     # same-shaped local discover — it must NOT register as a cache hit
     assert engine.stats.compile_cache_hits == hits_before
     b = engine.sharded(g, mesh, ("z",))
-    assert engine.stats.compile_cache_hits == hits_before + 1
+    assert engine.stats.compile_cache_hits == \
+        hits_before + len(a.layout["buckets"])
     assert a.counts == b.counts
     assert len(engine._mesh_steps) == 1      # step compiled once, reused
     with warnings.catch_warnings():
