@@ -27,7 +27,13 @@ Measures, on real zone batches (not ShapeDtypeStructs):
    edges/sec on a bursty corpus whose zone sizes span several power-of-two
    buckets, plus proof that the engine's per-bucket compile cache still
    registers hits under the bucketed layout.  CI asserts
-   ``padding_ratio_bucketed < padding_ratio_dense`` on the smoke JSON.
+   ``padding_ratio_bucketed < padding_ratio_dense`` on the smoke JSON;
+7. **fused single-launch scan** (kernels/zone_scan ``fused_zone_scan_flat``
+   + executor ``run_fused``): per-bucket dispatch loop vs ONE bucket-native
+   ``pallas_call`` over the concatenated slot stream with the Phase-2
+   signed fold fused on-device — only the bounded ``CodeCounts`` table and
+   a spill flag return to host.  CI asserts the fused path reports exactly
+   one launch per mine and edges/sec no worse than per-bucket.
 
 ``run_json`` additionally returns a structured payload for
 ``benchmarks/run.py --out-json`` (edges/sec + peak-memory estimates + the
@@ -237,6 +243,74 @@ def _zone_layout_section(smoke: bool):
     return rows, payload
 
 
+def _fused_section(smoke: bool):
+    """Fused single-launch scan vs the per-bucket dispatch loop.
+
+    Same bursty corpus and bucketed layout; the fused path concatenates
+    every bucket into one flat slot stream and runs ONE ``pallas_call``
+    with the Phase-2 fold on-device, so candidate codes never round-trip
+    to host.  Counts must be identical; ``launches`` comes from the
+    executor's ``last_run_stats`` and CI asserts the fused path reports
+    exactly one launch per mine and is no slower than per-bucket.
+    """
+    n_edges = 2_500 if smoke else 20_000
+    g = sg.bursty_stream(n_edges, 250, burst_size=120, burst_span=200,
+                         gap_span=30_000, seed=13)
+    plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    ex = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas")
+
+    modes = {}
+    counts_seen = {}
+    stats_seen = {}
+    for name, fused in (("per_bucket", False), ("fused", True)):
+        run = lambda fused=fused: transitions.device_counts_to_dict(
+            ex.run_layout(lay, fused=fused))
+        counts, secs = timed(run, warmup=1, repeats=2 if smoke else 3)
+        counts_seen[name] = counts
+        stats_seen[name] = dict(ex.last_run_stats)
+        modes[name] = {
+            "seconds": secs,
+            "edges_per_s": g.n_edges / secs if secs else 0.0,
+            "launches": stats_seen[name]["launches"],
+        }
+    assert counts_seen["fused"] == counts_seen["per_bucket"], \
+        "fused != per-bucket — differential bug"
+    assert stats_seen["fused"]["launches"] == 1
+
+    payload = {
+        "edges": g.n_edges,
+        "n_buckets": lay.n_buckets,
+        "modes": modes,
+        "launches_fused": stats_seen["fused"]["launches"],
+        "launches_per_bucket": stats_seen["per_bucket"]["launches"],
+        "edges_per_s_fused": modes["fused"]["edges_per_s"],
+        "edges_per_s_per_bucket": modes["per_bucket"]["edges_per_s"],
+        "fold_chunk": stats_seen["fused"]["fold_chunk"],
+        "merge_cap": stats_seen["fused"]["merge_cap"],
+        "n_slots": stats_seen["fused"]["n_slots"],
+        "sweep_slots": stats_seen["fused"]["sweep_slots"],
+        "spill_retries": stats_seen["fused"]["spill_retries"],
+        "speedup_fused_vs_per_bucket": (
+            modes["per_bucket"]["seconds"] / modes["fused"]["seconds"]
+            if modes["fused"]["seconds"] else 0.0),
+    }
+    rows = [
+        csv_row(
+            f"perf_mining/scan_{name}", m["seconds"],
+            f"edges_per_s={m['edges_per_s']:.0f};launches={m['launches']}",
+        )
+        for name, m in modes.items()
+    ]
+    rows.append(csv_row(
+        "perf_mining/fused_launch", 0.0,
+        f"launches=1_vs_{payload['launches_per_bucket']};"
+        f"speedup={payload['speedup_fused_vs_per_bucket']:.2f}x;"
+        f"n_slots={payload['n_slots']};fold_chunk={payload['fold_chunk']}",
+    ))
+    return rows, payload
+
+
 def _engine_reuse_section(smoke: bool):
     """Cold vs warm ``PTMTEngine.discover`` on one workload shape.
 
@@ -360,6 +434,11 @@ def run_json(smoke: bool = False):
     layout_rows, layout_payload = _zone_layout_section(smoke)
     rows.extend(layout_rows)
     payload["zone_layout"] = layout_payload
+
+    # 7) fused single-launch scan: one dispatch, fold on-device
+    fused_rows, fused_payload = _fused_section(smoke)
+    rows.extend(fused_rows)
+    payload["fused"] = fused_payload
     return rows, payload
 
 

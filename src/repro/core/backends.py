@@ -59,7 +59,10 @@ class BackendSpec:
     max_recommended_e_cap: int | None = None
     mem_model: Callable[[int, int], int] | None = None
     default_merge_cap: int | None = None
+    fused_loader: Callable[[], Callable] | None = None
     _scan: Callable | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _fused_scan: Callable | None = dataclasses.field(
         default=None, repr=False, compare=False)
 
     @property
@@ -68,6 +71,28 @@ class BackendSpec:
         if self._scan is None:
             self._scan = self.loader()
         return self._scan
+
+    @property
+    def supports_fused(self) -> bool:
+        """Whether this backend publishes a flat single-launch scan."""
+        return self.fused_loader is not None
+
+    @property
+    def fused_scan(self) -> Callable:
+        """Resolve (and cache) the fused flat-stream scan callable.
+
+        Signature: ``fused_scan(u, v, t, valid, zone_id, hi, *, delta,
+        l_max, blk) -> (code int32[S, L], length int32[S])`` over a
+        concatenated :class:`repro.core.tzp.FusedZoneLayout` slot stream.
+        """
+        if self.fused_loader is None:
+            raise ValueError(
+                f"backend {self.name!r} has no fused single-launch scan "
+                f"(fused paths need a bucket-native kernel; use the "
+                f"per-bucket layout path instead)")
+        if self._fused_scan is None:
+            self._fused_scan = self.fused_loader()
+        return self._fused_scan
 
 
 _REGISTRY: dict[str, BackendSpec] = {}
@@ -85,12 +110,15 @@ def register_backend(
     max_recommended_e_cap: int | None = None,
     mem_model: Callable[[int, int], int] | None = None,
     default_merge_cap: int | None = None,
+    fused_loader: Callable[[], Callable] | None = None,
     overwrite: bool = False,
 ) -> BackendSpec:
     """Publish a zone-scan backend under ``name``.
 
     ``loader`` is a zero-arg callable returning the scan function; it runs
     at most once, on first :func:`get_backend` resolution.
+    ``fused_loader`` (optional) resolves the backend's single-launch flat
+    scan over a concatenated ragged layout — see ``BackendSpec.fused_scan``.
     """
     if name in _REGISTRY and not overwrite:
         raise ValueError(f"backend {name!r} already registered "
@@ -101,6 +129,7 @@ def register_backend(
         default_zone_chunk=default_zone_chunk,
         max_recommended_e_cap=max_recommended_e_cap,
         mem_model=mem_model, default_merge_cap=default_merge_cap,
+        fused_loader=fused_loader,
     )
     _REGISTRY[name] = spec
     return spec
@@ -137,11 +166,23 @@ def _load_ref():
 # kernel defaults cannot drift.
 PALLAS_BLOCK_DEFAULTS = {"c_blk": 512, "e_blk": 256}
 
+#: Candidate-block width of the fused single-launch flat kernel.  Matches
+#: ``c_blk`` so a fused candidate block does the same lane-width work as a
+#: dense candidate block — but sweeps only its own zones' flat span instead
+#: of a whole padded bucket.
+FUSED_BLK_DEFAULT = 512
+
 
 def _load_pallas():
     from repro.kernels.zone_scan import ops as zone_ops
 
     return zone_ops.scan_zones
+
+
+def _load_pallas_fused():
+    from repro.kernels.zone_scan import ops as zone_ops
+
+    return zone_ops.scan_flat
 
 
 def _load_numpy():
@@ -175,6 +216,7 @@ register_backend(
     description="Pallas TPU kernel with live-window block skipping",
     block_defaults=PALLAS_BLOCK_DEFAULTS,
     mem_model=_pallas_mem_model,
+    fused_loader=_load_pallas_fused,
 )
 
 register_backend(

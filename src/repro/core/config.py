@@ -35,7 +35,7 @@ import warnings
 from typing import Any
 
 from . import backends
-from .executor import AGG_MODES
+from .executor import AGG_MODES, FUSED_MODES
 from .tzp import ZONE_LAYOUTS
 
 __all__ = ["MiningConfig"]
@@ -62,6 +62,10 @@ _CLI_HELP = {
                    "skewed zone sizes), 'dense' pads every zone to the "
                    "global max, 'auto' buckets only when sizes span more "
                    "than one bucket",
+    "fused": "single-launch layout dispatch: 'auto' mines the whole layout "
+             "in one bucket-native kernel launch (Phase-2 fold on-device) "
+             "whenever the backend has a flat kernel, 'on' requires one, "
+             "'off' keeps one launch per bucket",
 }
 
 
@@ -90,6 +94,7 @@ class MiningConfig:
     memory_budget_mb: float | None = None
     allow_overflow: bool = False
     zone_layout: str = "auto"
+    fused: str = "auto"
 
     def __post_init__(self):
         # frozen dataclass: normalize via object.__setattr__ before the
@@ -143,6 +148,9 @@ class MiningConfig:
             raise ValueError(
                 f"unknown zone layout {self.zone_layout!r}; one of "
                 f"{ZONE_LAYOUTS}")
+        if self.fused not in FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {self.fused!r}; one of {FUSED_MODES}")
         # resolves through the live registry so plugin backends validate
         # too; unknown names raise ValueError listing what is available
         backends.get_backend(self.backend)
@@ -231,6 +239,9 @@ class MiningConfig:
         parser.add_argument("--zone-layout", default=defaults["zone_layout"],
                             choices=list(ZONE_LAYOUTS),
                             help=_CLI_HELP["zone_layout"])
+        parser.add_argument("--fused", default=defaults["fused"],
+                            choices=list(FUSED_MODES),
+                            help=_CLI_HELP["fused"])
 
     @classmethod
     def from_cli_args(cls, args) -> "MiningConfig":

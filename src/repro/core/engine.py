@@ -60,6 +60,8 @@ class EngineStats:
     plan_cache_hits: int = 0        # discover calls that skipped plan_zones
     plan_cache_misses: int = 0      # discover calls that ran Algorithm 1
     zones_mined: int = 0
+    launches: int = 0               # scan dispatches (fused layout run = 1)
+    fused_runs: int = 0             # discover calls served by the fused path
     padding_ratio: float = 0.0      # last layout's padded-slot waste
     bucket_occupancy: dict = dataclasses.field(default_factory=dict)
 
@@ -186,13 +188,22 @@ class PTMTEngine:
         keys = self.executor.layout_execution_keys(layout)
         counts = self.executor.run_layout(
             layout, allow_overflow=self.config.allow_overflow)
-        for key, bucket in zip(keys, layout.buckets):
-            self._note_execution(key, bucket.n_zones)
+        run_stats = self.executor.last_run_stats
+        if run_stats.get("path") == "fused":
+            # one launch, one executable: the whole layout resolves to a
+            # single fused execution key
+            self._note_execution(keys[0], layout.n_zones)
+            self.stats.fused_runs += 1
+        else:
+            for key, bucket in zip(keys, layout.buckets):
+                self._note_execution(key, bucket.n_zones)
+        self.stats.launches += int(run_stats.get("launches", 0))
         self._note_layout(layout)
         return counts_to_result(
             counts, n_zones=plan.n_zones, e_cap=layout.e_cap,
             overflow=layout.overflow, delta=self.config.delta,
-            l_max=self.config.l_max, layout=layout.summary(),
+            l_max=self.config.l_max,
+            layout={**layout.summary(), "execution": dict(run_stats)},
         )
 
     def sequential(self, graph: TemporalGraph) -> DiscoveryResult:

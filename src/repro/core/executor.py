@@ -64,9 +64,15 @@ import jax.numpy as jnp
 
 from . import aggregation, backends, encoding, planner
 from .aggregation import CodeCounts
-from .tzp import ZoneBatch, ZoneBatchLayout
+from .tzp import (ZoneBatch, ZoneBatchLayout, concat_layout,
+                  pad_zone_arrays)
 
 AGG_MODES = ("auto", "legacy", "hierarchical", "pipelined")
+
+#: Fused single-launch dispatch policy for ``run_layout``: "auto" fuses
+#: whenever the backend publishes a bucket-native flat kernel, "on"
+#: requires one (erroring otherwise), "off" keeps the per-bucket path.
+FUSED_MODES = ("auto", "on", "off")
 
 
 def merge_partial_counts(
@@ -247,6 +253,44 @@ def _pipeline_step(carry, spilled, u, v, t, valid, signs, *, delta, l_max,
 
 
 @functools.partial(
+    jax.jit,
+    static_argnames=("delta", "l_max", "scan", "blk", "fold_chunk",
+                     "merge_cap"),
+)
+def _mine_fused_jit(u, v, t, valid, zone_id, sign, hi, *, delta, l_max,
+                    scan, blk, fold_chunk, merge_cap):
+    """Jitted fused path: single-launch flat scan + on-device Phase-2 fold.
+
+    One executable does the whole mine: the bucket-native kernel sweeps
+    every zone of the concatenated layout in a single ``pallas_call``, and
+    the candidate codes fold straight through ``count_codes`` +
+    ``merge_bounded`` in ``fold_chunk``-row slices inside the same jit —
+    only the bounded ``CodeCounts`` table and the spill counter leave the
+    device.  The [S, L] code block never round-trips to host.
+    """
+    code, length = scan(u, v, t, valid, zone_id, hi,
+                        delta=delta, l_max=l_max, blk=blk)
+    s, limbs = code.shape
+    w = (length > 0).astype(jnp.int32) * sign
+    codes = jnp.where(w[:, None] != 0, code, 0)
+    nchunk = s // fold_chunk
+    xs = (codes.reshape(nchunk, fold_chunk, limbs),
+          w.reshape(nchunk, fold_chunk))
+
+    def body(carry, chunk):
+        counts, spilled = carry
+        chunk_codes, chunk_w = chunk
+        part = aggregation.count_codes(chunk_codes, chunk_w)
+        merged, spill = aggregation.merge_bounded(counts, part,
+                                                  cap=merge_cap)
+        return (merged, spilled + spill), None
+
+    init = (aggregation.empty_counts(merge_cap, limbs), jnp.int32(0))
+    (counts, spilled), _ = jax.lax.scan(body, init, xs)
+    return counts, spilled
+
+
+@functools.partial(
     jax.jit, static_argnames=("merge_cap",), donate_argnums=(0, 1)
 )
 def _merge_chunk_jit(carry, spilled, codes, lengths, signs, *, merge_cap):
@@ -274,6 +318,17 @@ class MiningExecutor:
       memory_budget_mb: derive ``zone_chunk``/``merge_cap`` from this
         device-memory budget via :mod:`repro.core.planner` whenever
         ``zone_chunk`` was not given explicitly.
+      fused: single-launch dispatch policy for :meth:`run_layout` —
+        "auto" (default) fuses whenever the backend publishes a
+        bucket-native flat kernel, "on" requires one, "off" keeps the
+        per-bucket path.  A per-call ``run_layout(fused=...)`` override
+        beats the policy.
+
+    After every :meth:`run_layout`/:meth:`run_fused`, ``last_run_stats``
+    describes the dispatch that produced the result: ``path``
+    ("fused"/"per-bucket"), ``launches`` (scan dispatches in the final
+    successful attempt — 1 for fused, one per bucket otherwise) and
+    ``spill_retries`` (merge-cap doublings, each re-running the launch).
     """
 
     def __init__(
@@ -287,11 +342,15 @@ class MiningExecutor:
         agg: str = "auto",
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
+        fused: str = "auto",
     ):
         if pad_policy not in ("pad", "raise"):
             raise ValueError(f"unknown pad_policy {pad_policy!r}")
         if agg not in AGG_MODES:
             raise ValueError(f"unknown agg mode {agg!r}; one of {AGG_MODES}")
+        if fused not in FUSED_MODES:
+            raise ValueError(
+                f"unknown fused mode {fused!r}; one of {FUSED_MODES}")
         self.delta = int(delta)
         self.l_max = int(l_max)
         self.spec = backends.get_backend(backend)
@@ -307,6 +366,9 @@ class MiningExecutor:
         self.agg = agg
         self.merge_cap = int(merge_cap) if merge_cap else None
         self.memory_budget_mb = memory_budget_mb
+        self.fused = fused
+        self.fused_blk = backends.FUSED_BLK_DEFAULT
+        self.last_run_stats: dict = {}
         self._plan_cache: dict[tuple, object] = {}
 
     @classmethod
@@ -322,6 +384,7 @@ class MiningExecutor:
             zone_chunk=config.zone_chunk, agg=config.agg,
             merge_cap=config.merge_cap,
             memory_budget_mb=config.memory_budget_mb,
+            fused=getattr(config, "fused", "auto"),
         )
 
     @property
@@ -501,34 +564,170 @@ class MiningExecutor:
         return self.run_arrays(batch.u, batch.v, batch.t, batch.valid,
                                batch.sign, label=batch.label)
 
+    def resolve_fused(self, fused: bool | None = None) -> bool:
+        """Resolve the fused-dispatch decision for a layout run.
+
+        A per-call boolean beats the constructor policy; ``True`` (or
+        policy "on") on a backend without a flat kernel raises rather than
+        silently falling back — the caller asked for one launch and would
+        otherwise benchmark the wrong path.
+        """
+        if fused is None:
+            if self.fused == "off":
+                return False
+            if self.fused == "auto":
+                return self.spec.supports_fused
+            fused = True
+        if fused and not self.spec.supports_fused:
+            raise ValueError(
+                f"backend {self.backend!r} has no fused single-launch "
+                f"scan; use fused=False (or fused='off') for the "
+                f"per-bucket path")
+        return bool(fused)
+
     def run_layout(self, layout: ZoneBatchLayout, *,
-                   allow_overflow: bool = False) -> CodeCounts:
+                   allow_overflow: bool = False,
+                   fused: bool | None = None) -> CodeCounts:
         """Mine a :class:`ZoneBatchLayout` (dense or bucketed) exactly.
 
-        Each bucket runs through :meth:`run_arrays` with its own shape —
-        and hence its own budget-derived ``zone_chunk``/``merge_cap`` from
-        :meth:`capacity_plan`, keyed on the bucket's geometry rather than
-        the global max — then the per-bucket partial count tables fold
-        through the signed bounded-carry merge
-        (:func:`merge_partial_counts`).  Lemma 4.2's signed sum is
-        associative over zones, so the split is exact; the differential
-        tests assert dense == bucketed code-for-code.
+        Dispatch is decided by :meth:`resolve_fused`: the fused path
+        (:meth:`run_fused`) mines the whole layout in a single
+        bucket-native kernel launch with the Phase-2 fold on-device; the
+        per-bucket path runs each bucket through :meth:`run_arrays` with
+        its own shape — and hence its own budget-derived
+        ``zone_chunk``/``merge_cap`` from :meth:`capacity_plan`, keyed on
+        the bucket's geometry rather than the global max — then folds the
+        per-bucket partial count tables through the signed bounded-carry
+        merge (:func:`merge_partial_counts`).  Lemma 4.2's signed sum is
+        associative over zones, so either split is exact; the differential
+        tests assert fused == per-bucket == dense code-for-code.
         """
+        if self.resolve_fused(fused):
+            return self.run_fused(layout, allow_overflow=allow_overflow)
         self.check_layout_overflow(layout, allow_overflow=allow_overflow)
         parts = [
             self.run_arrays(b.u, b.v, b.t, b.valid, b.sign, label=b.label)
             for b in layout.buckets
         ]
+        self.last_run_stats = {
+            "path": "per-bucket",
+            "launches": len(layout.buckets),
+            "spill_retries": 0,
+        }
         return merge_partial_counts(parts, merge_cap=self.merge_cap,
                                     warn_label="zone-layout bucket")
 
-    def layout_execution_keys(self, layout: ZoneBatchLayout) -> tuple:
-        """Per-bucket :meth:`execution_key` tuple for a layout.
+    # -- fused single-launch path -------------------------------------------
 
-        Bucket shapes — not whole-layout shapes — key the jit caches, so
-        a recurring bucket geometry reuses its compiled executable even
-        when the surrounding layout (other buckets, zone totals) differs.
+    def _fused_geometry(self, layout: ZoneBatchLayout) -> tuple[int, int, int]:
+        """``(blk, fold_chunk, n_slots_padded)`` for a layout's fused run.
+
+        Derivable from bucket shapes alone (no arrays built), so
+        :meth:`fused_execution_key` can report the compile-cache geometry
+        without paying the concatenation.  Must agree with
+        :func:`repro.core.tzp.concat_layout`'s padding rule.
         """
+        blk = self.fused_blk
+        real_slots = sum(b.n_real_zones * b.e_cap for b in layout.buckets)
+        if self.memory_budget_mb is not None:
+            key = ("fused", real_slots)
+            plan = self._plan_cache.get(key)
+            if plan is None:
+                plan = planner.plan_fused_capacity(
+                    n_slots=real_slots, l_max=self.l_max,
+                    memory_budget_mb=self.memory_budget_mb, blk=blk,
+                    merge_cap=self.merge_cap,
+                )
+                self._plan_cache[key] = plan
+            fold_chunk = plan.fold_chunk
+        else:
+            fold_chunk = planner.default_fold_chunk(real_slots, blk=blk)
+        mult = fold_chunk
+        s_pad = max(-(-max(real_slots, 1) // mult) * mult, mult)
+        return blk, fold_chunk, s_pad
+
+    def _fused_merge_cap(self, fold_chunk: int) -> int:
+        if self.merge_cap:
+            return self.merge_cap
+        if self.spec.default_merge_cap:
+            return self.spec.default_merge_cap
+        return max(1024, fold_chunk)
+
+    def fused_execution_key(self, layout: ZoneBatchLayout) -> tuple:
+        """The compile-cache key a fused layout run resolves to.
+
+        The fused analog of :meth:`execution_key`: the jitted executable
+        is keyed on the flat stream geometry (padded slot count + block
+        size) and the fold shape, not on per-bucket shapes — two layouts
+        that concatenate to the same stream reuse one executable.
+        """
+        blk, fold_chunk, s_pad = self._fused_geometry(layout)
+        merge_cap = min(self._fused_merge_cap(fold_chunk), s_pad + 1)
+        return ("fused", self.backend, self.delta, self.l_max, s_pad, blk,
+                fold_chunk, merge_cap)
+
+    def run_fused(self, layout: ZoneBatchLayout, *,
+                  allow_overflow: bool = False) -> CodeCounts:
+        """Mine a layout in ONE bucket-native kernel launch, fold on-device.
+
+        The layout is flattened to a :class:`~repro.core.tzp.
+        FusedZoneLayout` slot stream (real zone rows only, padded to the
+        fold chunk) and handed to the backend's flat kernel inside
+        ``_mine_fused_jit`` — a single ``pallas_call`` whose grid spans
+        every bucket, with the ``count_codes``/``merge_bounded`` fold in
+        the same executable.  Only the bounded count table and the spill
+        counter come back; a spill retries host-side with a doubled cap
+        (ceiling ``n_slots + 1``, which provably cannot spill).
+        """
+        self.check_layout_overflow(layout, allow_overflow=allow_overflow)
+        blk, fold_chunk, _ = self._fused_geometry(layout)
+        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk)
+        cap_ceiling = fl.n_slots + 1
+        merge_cap = min(self._fused_merge_cap(fold_chunk), cap_ceiling)
+        arrays = tuple(jnp.asarray(x) for x in (
+            fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+        retries = 0
+        while True:
+            counts, spilled = _mine_fused_jit(
+                *arrays, delta=self.delta, l_max=self.l_max,
+                scan=self.spec.fused_scan, blk=blk, fold_chunk=fold_chunk,
+                merge_cap=merge_cap,
+            )
+            n_spilled = int(spilled)
+            if n_spilled == 0:
+                self.last_run_stats = {
+                    "path": "fused",
+                    "launches": 1,
+                    "spill_retries": retries,
+                    "merge_cap": merge_cap,
+                    "fold_chunk": fold_chunk,
+                    "n_slots": fl.n_slots,
+                    "sweep_slots": fl.sweep_slots,
+                }
+                return counts
+            need = max(2 * merge_cap, merge_cap + n_spilled, 8)
+            new_cap = min(1 << (need - 1).bit_length(), cap_ceiling)
+            warnings.warn(
+                f"fused on-device merge spilled {n_spilled} unique code(s) "
+                f"at merge_cap={merge_cap}; retrying with "
+                f"merge_cap={new_cap}",
+                RuntimeWarning, stacklevel=3,
+            )
+            merge_cap = new_cap
+            retries += 1
+
+    def layout_execution_keys(self, layout: ZoneBatchLayout,
+                              fused: bool | None = None) -> tuple:
+        """Execution keys a layout run will resolve to.
+
+        Per-bucket :meth:`execution_key` tuples on the per-bucket path —
+        bucket shapes, not whole-layout shapes, key the jit caches, so a
+        recurring bucket geometry reuses its compiled executable even when
+        the surrounding layout differs.  On the fused path the whole
+        layout resolves to one :meth:`fused_execution_key`.
+        """
+        if self.resolve_fused(fused):
+            return (self.fused_execution_key(layout),)
         return tuple(self.execution_key(b.n_zones, b.e_cap)
                      for b in layout.buckets)
 
@@ -548,12 +747,9 @@ class MiningExecutor:
                     f"zone(s) would need inert padding rows — pad the "
                     f"batch (pad_policy='pad') or pick a divisor"
                 )
-            pad = zc - z % zc
-            pad_rows = lambda x: np.concatenate(
-                [x, np.zeros((pad, *x.shape[1:]), x.dtype)])
-            u, v, t, valid = map(pad_rows, (u, v, t, valid))
-            signs = np.concatenate([signs, np.zeros(pad, signs.dtype)])
-            z += pad
+            u, v, t, valid, signs = pad_zone_arrays(
+                u, v, t, valid, signs, n_rows=z + (zc - z % zc))
+            z = u.shape[0]
 
         mode = self._agg_mode_for(zc, z)
         if mode == "legacy":

@@ -98,6 +98,85 @@ def hierarchical_peak_bytes(zone_chunk: int, e_cap: int, l_max: int, *,
     return scan_state + carry + count_table_bytes(merge_rows, l_max)
 
 
+def fused_peak_bytes(n_slots: int, l_max: int, *, fold_chunk: int,
+                     merge_cap: int) -> int:
+    """Peak estimate of the fused single-launch path.
+
+    The concatenated stream's resident state: six flat int32 input arrays
+    (u, v, t, valid, zone_id, sign), the kernel's [S, L] code + [S] length
+    outputs (HBM-resident between the scan and the fold — they never
+    round-trip to host), the bounded merge carry, and one fold step's sort
+    scratch (``fold_chunk + merge_cap`` rows).  Unlike the per-bucket
+    hierarchical model there is no per-zone scan-state term: candidate
+    state lives in registers/VMEM per grid step, not in an allocated
+    [zone_chunk, E] batch.
+    """
+    limbs = encoding.n_limbs(l_max)
+    inputs = 6 * 4 * n_slots
+    outputs = n_slots * (4 * limbs + 4)
+    carry = merge_cap * 4 * (limbs + 1)
+    return (inputs + outputs + carry
+            + count_table_bytes(fold_chunk + merge_cap, l_max))
+
+
+def default_fold_chunk(n_slots: int, *, blk: int) -> int:
+    """Fold-chunk default: ~4096 candidate rows per on-device fold step,
+    rounded to a ``blk`` multiple and clamped to the (blk-aligned) stream
+    so tiny layouts do not pad up to a chunk they cannot fill."""
+    target = max(blk, 4096 // blk * blk)
+    slots = max(-(-max(n_slots, 1) // blk) * blk, blk)
+    return min(target, slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedCapacityPlan:
+    """Budget-derived capacities for the fused single-launch path."""
+
+    fold_chunk: int
+    merge_cap: int
+    budget_bytes: int
+    est_peak_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.est_peak_bytes <= self.budget_bytes
+
+
+def plan_fused_capacity(
+    *,
+    n_slots: int,
+    l_max: int,
+    memory_budget_mb: float,
+    blk: int,
+    merge_cap: int | None = None,
+) -> FusedCapacityPlan:
+    """Largest ``blk``-multiple ``fold_chunk`` whose fused peak fits.
+
+    Mirrors :func:`plan_capacity` for the flat stream: the fold chunk is
+    the only free memory knob (the stream itself is workload-determined),
+    doubling from ``blk`` while the estimate stays under budget.
+    ``merge_cap`` defaults to one fold chunk's rows, exactly like the
+    per-bucket default of one zone chunk's rows.
+    """
+    if memory_budget_mb <= 0:
+        raise ValueError("memory_budget_mb must be > 0")
+    budget = int(memory_budget_mb * 2**20)
+    ceiling = default_fold_chunk(n_slots, blk=blk)
+
+    def peak(fc: int) -> int:
+        cap = merge_cap if merge_cap is not None else max(1024, fc)
+        return fused_peak_bytes(n_slots, l_max, fold_chunk=fc, merge_cap=cap)
+
+    fc = blk
+    while fc * 2 <= ceiling and peak(fc * 2) <= budget:
+        fc *= 2
+    cap = merge_cap if merge_cap is not None else max(1024, fc)
+    return FusedCapacityPlan(
+        fold_chunk=fc, merge_cap=cap, budget_bytes=budget,
+        est_peak_bytes=peak(fc),
+    )
+
+
 def default_merge_cap(zone_chunk: int, e_cap: int) -> int:
     """One chunk's candidate rows: the first chunk can never spill, and the
     carry is no bigger than the partial table it merges with.  The 1024-row

@@ -123,6 +123,30 @@ def adaptive_zone_end(t: np.ndarray, s: int, e: int, *, e_cap: int | None,
     return int(np.clip(e_shrunk, s + 2 * l_b, e))
 
 
+def pad_zone_arrays(u, v, t, valid, signs, *, n_rows: int):
+    """Append inert zone rows so the batch has exactly ``n_rows`` zones.
+
+    The one copy of the "inert row" definition: all-invalid edges and sign
+    0, so a padded row seeds no candidates and its signed contribution is
+    identically zero.  Used by the executor's ``pad_policy="pad"`` path
+    (zone counts that do not divide ``zone_chunk``) — the same rule
+    :func:`build_zone_batch` applies via ``pad_zones_to``, shared instead
+    of re-derived inline at the call site.
+    """
+    z = u.shape[0]
+    if n_rows < z:
+        raise ValueError(
+            f"cannot pad a {z}-zone batch down to {n_rows} rows")
+    if n_rows == z:
+        return u, v, t, valid, signs
+    pad = n_rows - z
+    pad_rows = lambda x: np.concatenate(
+        [x, np.zeros((pad, *x.shape[1:]), x.dtype)])
+    u, v, t, valid = map(pad_rows, (u, v, t, valid))
+    signs = np.concatenate([signs, np.zeros(pad, signs.dtype)])
+    return u, v, t, valid, signs
+
+
 def fill_zone_row(u_row, v_row, t_row, valid_row, su, sv, st) -> None:
     """Copy one zone's edges into a padded batch row (in place).
 
@@ -445,6 +469,154 @@ class ZoneBatchLayout:
                 for b in self.buckets
             ],
         }
+
+
+@dataclasses.dataclass(frozen=True)
+class FusedZoneLayout:
+    """A :class:`ZoneBatchLayout` flattened into one device slot stream.
+
+    Every bucket's padded ``[Z_b, e_cap_b]`` rows are flattened and
+    concatenated into flat ``int32[S]`` arrays (``S`` rounded up to a
+    multiple of ``blk``), so a *single* kernel launch can sweep the whole
+    ragged layout: candidate blocks of ``blk`` lanes tile the stream and
+    the per-block ``hi`` descriptor bounds each block's sweep to the flat
+    span of the zones its lanes belong to.  ``zone_id`` (the global zone
+    row per slot, -1 for stream padding) gates the kernel's edge updates
+    to same-zone pairs, and ``sign`` carries each slot's Lemma-4.2 sign so
+    the on-device fold can weight candidates without a host gather.
+    """
+
+    u: np.ndarray         # int32[S] flat edge endpoints
+    v: np.ndarray         # int32[S]
+    t: np.ndarray         # int32[S] timestamps (0 on invalid slots)
+    valid: np.ndarray     # int32[S] real-edge mask
+    zone_id: np.ndarray   # int32[S] owning zone row (-1 = stream pad)
+    sign: np.ndarray      # int32[S] zone sign per slot (0 on pad)
+    hi: np.ndarray        # int32[S // blk] blk-aligned sweep end per block
+    blk: int
+    kind: str                                   # source layout kind
+    bucket_shapes: tuple[tuple[int, int], ...]  # source (Z_b, e_cap_b)
+    n_zones: int                                # real zones in the stream
+    overflow: int
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.u.shape[0])
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_slots // self.blk
+
+    @property
+    def valid_edges(self) -> int:
+        return int((self.valid != 0).sum())
+
+    @property
+    def sweep_slots(self) -> int:
+        """Padded pairwise sweep work actually dispatched: each candidate
+        block sweeps ``hi - base`` slots (before live-window skipping).
+        The fused analog of :attr:`ZoneBatchLayout.sweep_slots`."""
+        bases = np.arange(self.n_blocks, dtype=np.int64) * self.blk
+        return int(self.blk * (self.hi.astype(np.int64) - bases).sum())
+
+    def signature(self) -> tuple:
+        """Compile-cache geometry: one jitted executable per signature."""
+        return (self.kind, self.bucket_shapes, self.n_slots, self.blk)
+
+    def summary(self) -> dict:
+        """JSON-able description (benchmarks, ``engine.stats``)."""
+        return {
+            "kind": f"fused-{self.kind}",
+            "n_zones": self.n_zones,
+            "n_slots": self.n_slots,
+            "blk": self.blk,
+            "n_blocks": self.n_blocks,
+            "valid_edges": self.valid_edges,
+            "sweep_slots": self.sweep_slots,
+            "bucket_shapes": [list(s) for s in self.bucket_shapes],
+        }
+
+
+def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
+                  pad_slots_to: int | None = None) -> FusedZoneLayout:
+    """Flatten a (dense or bucketed) layout into a fused slot stream.
+
+    Buckets are visited in layout order (ascending capacity) and only real
+    zone rows (``perm >= 0``) are emitted — inert zone-padding rows would
+    be pure wasted sweep in a stream that has no rectangular shape to
+    satisfy.  The stream is padded to a multiple of ``blk`` (and of
+    ``pad_slots_to`` when given — the executor passes its on-device fold
+    chunk so the count fold tiles evenly); padding slots carry ``valid=0``,
+    ``zone_id=-1``, ``sign=0``.
+
+    ``hi[i]`` is the blk-aligned end of the last zone any of block ``i``'s
+    lanes belongs to: a lane's extensions can only come from later slots of
+    its own zone row (earlier same-zone edges are not strictly later in
+    time, so they can neither extend nor time out the candidate), hence
+    sweeping ``[i*blk, hi[i])`` is exact.
+    """
+    if blk < 1:
+        raise ValueError(f"blk must be >= 1, got {blk}")
+    mult = blk
+    if pad_slots_to:
+        if pad_slots_to % blk:
+            raise ValueError(
+                f"pad_slots_to {pad_slots_to} must be a multiple of "
+                f"blk {blk}")
+        mult = pad_slots_to
+
+    chunks_u, chunks_v, chunks_t, chunks_valid = [], [], [], []
+    chunks_zid, chunks_sign, row_ends = [], [], []
+    zone_row = 0
+    pos = 0
+    for b in layout.buckets:
+        real = np.flatnonzero(b.perm >= 0)
+        cap = b.e_cap
+        for r in real:
+            chunks_u.append(b.u[r])
+            chunks_v.append(b.v[r])
+            chunks_t.append(b.t[r])
+            chunks_valid.append(b.valid[r])
+            chunks_zid.append(np.full(cap, zone_row, np.int32))
+            chunks_sign.append(np.full(cap, b.sign[r], np.int32))
+            pos += cap
+            row_ends.append(np.full(cap, pos, np.int64))
+            zone_row += 1
+
+    s = pos
+    s_pad = max(_round_up(max(s, 1), mult), mult)
+    pad = s_pad - s
+
+    def flat(parts, fill, dtype):
+        out = np.concatenate(parts).astype(dtype) if parts else \
+            np.zeros(0, dtype)
+        if pad:
+            out = np.concatenate([out, np.full(pad, fill, dtype)])
+        return out
+
+    u = flat(chunks_u, 0, np.int32)
+    v = flat(chunks_v, 0, np.int32)
+    t = flat(chunks_t, 0, np.int32)
+    valid = flat(chunks_valid, 0, np.int32)
+    zone_id = flat(chunks_zid, -1, np.int32)
+    sign = flat(chunks_sign, 0, np.int32)
+    # pad slots end at their own position so they never extend a sweep
+    slot_end = np.concatenate(row_ends).astype(np.int64) if row_ends else \
+        np.zeros(0, np.int64)
+    if pad:
+        slot_end = np.concatenate(
+            [slot_end, np.arange(s, s_pad, dtype=np.int64) + 1])
+
+    n_blocks = s_pad // blk
+    hi = slot_end.reshape(n_blocks, blk).max(axis=1)
+    hi = (hi + blk - 1) // blk * blk
+
+    return FusedZoneLayout(
+        u=u, v=v, t=t, valid=valid, zone_id=zone_id, sign=sign,
+        hi=hi.astype(np.int32), blk=blk, kind=layout.kind,
+        bucket_shapes=layout.bucket_shapes(), n_zones=zone_row,
+        overflow=layout.overflow,
+    )
 
 
 def _select_plan(plan: ZonePlan, idx: np.ndarray) -> ZonePlan:

@@ -1,0 +1,48 @@
+"""Shared utilities for the Pallas kernels.
+
+One copy of the interpret-mode default: every kernel wrapper used to
+inline ``interpret = jax.default_backend() == "cpu"``, which made it
+impossible for CI or a benchmark to force a mode without threading an
+argument through every call site.  :func:`resolve_interpret` adds a
+``REPRO_PALLAS_INTERPRET`` environment override on top of the backend
+heuristic, so a single env var flips the whole kernel suite:
+
+  * ``REPRO_PALLAS_INTERPRET=1`` (or ``true``/``yes``/``on``) — force the
+    Pallas interpreter everywhere (debugging a kernel on any device);
+  * ``REPRO_PALLAS_INTERPRET=0`` (or ``false``/``no``/``off``) — force
+    compiled lowering even on CPU (exercises the Triton/Mosaic pipeline);
+  * unset or ``auto`` — interpret exactly when the default backend is CPU
+    (the historical behavior: CPU has no Pallas lowering).
+
+An explicit ``interpret=`` argument at a call site still beats the env
+var — explicit beats derived everywhere in this codebase.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+__all__ = ["INTERPRET_ENV", "resolve_interpret"]
+
+INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
+
+_TRUE = ("1", "true", "yes", "on")
+_FALSE = ("0", "false", "no", "off")
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve a kernel's interpret-mode flag (see module docstring)."""
+    if interpret is not None:
+        return bool(interpret)
+    raw = os.environ.get(INTERPRET_ENV, "").strip().lower()
+    if raw in _TRUE:
+        return True
+    if raw in _FALSE:
+        return False
+    if raw not in ("", "auto"):
+        raise ValueError(
+            f"{INTERPRET_ENV}={raw!r} is not a recognized mode; use one of "
+            f"{_TRUE + _FALSE} or 'auto'")
+    return jax.default_backend() == "cpu"

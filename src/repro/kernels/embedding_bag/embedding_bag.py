@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(ids_ref, w_ref, table_ref, out_ref, *, b_blk, bag):
     def body(i, _):
@@ -37,8 +39,7 @@ def embedding_bag_pallas(
     table, ids, weights, *, b_blk: int = 64, interpret: bool | None = None,
 ):
     """table [V, D], ids [B, K], weights [B, K] -> [B, D]."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     b, bag = ids.shape
     v, d = table.shape
     b_pad = -(-b // b_blk) * b_blk

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import resolve_interpret
+
 
 def _kernel(dst_ref, values_ref, out_ref, *, n_blk, e_blk, n_e_blocks):
     ni = pl.program_id(0)
@@ -58,8 +60,7 @@ def scatter_sum_sorted_pallas(
 ):
     """values [E, D] already sorted by ``dst_sorted`` (invalid rows must be
     zeroed and their dst set to ``num_segments``-or-larger sentinel)."""
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     e, d = values.shape
     e_pad = -(-e // e_blk) * e_blk
     n_pad = -(-num_segments // n_blk) * n_blk

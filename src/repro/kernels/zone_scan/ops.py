@@ -13,10 +13,11 @@ import functools
 
 import jax
 
+from repro.core.backends import FUSED_BLK_DEFAULT
 from repro.core.backends import PALLAS_BLOCK_DEFAULTS as DEFAULT_BLOCKS
 from repro.core.expansion import ZoneResult
 
-from .zone_scan import zone_scan_pallas
+from .zone_scan import fused_zone_scan_flat, zone_scan_pallas
 
 
 @functools.partial(
@@ -45,3 +46,20 @@ def scan_zones(
         interpret=interpret,
     )
     return jax.vmap(fn)(u, v, t, valid)
+
+
+def scan_flat(
+    u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
+    blk: int = FUSED_BLK_DEFAULT, interpret: bool | None = None,
+):
+    """Single-launch fused scan over a concatenated flat slot stream.
+
+    The "pallas" registry entry's ``fused_loader`` target.  Traceable (the
+    executor jits it together with the on-device Phase-2 fold); returns
+    raw ``(code int32[S, L], length int32[S])`` per candidate slot rather
+    than a :class:`ZoneResult` — the flat stream has no zone axis.
+    """
+    return fused_zone_scan_flat(
+        u, v, t, valid, zone_id, hi, delta=delta, l_max=l_max, blk=blk,
+        interpret=interpret,
+    )

@@ -2,9 +2,39 @@
 
 The reference implementation lives in ``repro.core.expansion`` (it *is* the
 paper's Phase-1 semantics and is validated against the brute-force Python
-oracle in tests).  Kernel tests compare the Pallas kernel against this.
+oracle in tests).  Kernel tests compare the Pallas kernel against this —
+including the fused flat-stream kernel, via :func:`scan_flat_ref`.
 """
+
+import numpy as np
 
 from repro.core.expansion import ZoneResult, scan_zone, scan_zones
 
-__all__ = ["ZoneResult", "scan_zone", "scan_zones"]
+__all__ = ["ZoneResult", "scan_flat_ref", "scan_zone", "scan_zones"]
+
+
+def scan_flat_ref(u, v, t, valid, zone_id, *, delta: int, l_max: int):
+    """Oracle for ``fused_zone_scan_flat``: reassemble each zone from the
+    concatenated slot stream (slots of a zone are contiguous and
+    time-ordered) and run the per-zone reference scan, scattering results
+    back to flat slot positions.  Pad slots (``zone_id < 0``) keep
+    length 0."""
+    u, v, t = (np.asarray(a, np.int32) for a in (u, v, t))
+    valid = np.asarray(valid) != 0
+    zone_id = np.asarray(zone_id, np.int32)
+    s = u.shape[0]
+    code = None
+    length = np.zeros(s, np.int32)
+    for z in np.unique(zone_id[zone_id >= 0]):
+        idx = np.flatnonzero(zone_id == z)
+        res = scan_zone(u[idx], v[idx], t[idx], valid[idx],
+                        delta=delta, l_max=l_max)
+        if code is None:
+            code = np.zeros((s, res.code.shape[1]), np.int32)
+        code[idx] = np.asarray(res.code)
+        length[idx] = np.asarray(res.length)
+    if code is None:
+        from repro.core import encoding
+
+        code = np.zeros((s, encoding.n_limbs(l_max)), np.int32)
+    return ZoneResult(code=code, length=length)

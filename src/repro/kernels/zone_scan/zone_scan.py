@@ -1,30 +1,57 @@
-"""Pallas TPU kernel for PTMT Phase-1 zone expansion.
+"""Pallas kernels for PTMT Phase-1 zone expansion.
 
-Layout (all VMEM, lanes = candidates):
+Two kernels share one edge-update rule (:func:`_edge_update` — the single
+copy of the paper's Definition 2-5 transition semantics in Pallas land):
 
-  grid = (n_cand_blocks, n_edge_blocks)   # both sequential on TPU
-  scratch: candidate SoA for ONE candidate block —
-      length/last_t/done/n_nodes  int32[1, C_BLK]
-      nodes                       int32[K, C_BLK]   K = l_max + 1
-      code                        int32[L, C_BLK]   L = n_limbs(l_max)
-  inputs per cell: one edge block (u, v, t, valid as int32[1, E_BLK])
-      plus the candidate block's seed times t_cand[1, C_BLK]
-  outputs per candidate block: code int32[L, C_BLK], length int32[1, C_BLK]
+**Dense per-zone kernel** (:func:`zone_scan_pallas`) — the seed layout.
 
-With the candidate axis OUTER, each candidate block streams the whole edge
-stream once and is flushed exactly once; scratch is a single block
-(~(K+L+4) * C_BLK * 4 bytes ≈ 50 KB at C_BLK=1024, l_max=6 — far under VMEM).
+  Layout (all VMEM, lanes = candidates):
 
-**Live-window block skipping** (beyond-paper, the kernel's key optimization):
-cell (c, e) is skipped when
-  * every edge index in block e precedes every candidate in block c
-    (those candidates are not yet seeded: extensions need edge_idx > seed), or
-  * the e-block's first timestamp exceeds the c-block's last seed time by more
-    than ``l_max * delta`` (every candidate's lifetime is over — Lemma 4.1's
-    span bound).
-Edges are time-sorted, so both tests are O(1) block-boundary reads.  A
-candidate is live for ~``1/omega`` of its zone, so skipping turns the dense
-O(E^2) sweep into O(E^2 / omega) — measured in EXPERIMENTS.md §Perf.
+    grid = (n_cand_blocks, n_edge_blocks)   # both sequential on TPU
+    scratch: candidate SoA for ONE candidate block —
+        length/last_t/done/n_nodes  int32[1, C_BLK]
+        nodes                       int32[K, C_BLK]   K = l_max + 1
+        code                        int32[L, C_BLK]   L = n_limbs(l_max)
+    inputs per cell: one edge block (u, v, t, valid as int32[1, E_BLK])
+        plus the candidate block's seed times t_cand[1, C_BLK]
+    outputs per candidate block: code int32[L, C_BLK], length int32[1, C_BLK]
+
+  With the candidate axis OUTER, each candidate block streams the whole
+  edge stream once and is flushed exactly once; scratch is a single block
+  (~(K+L+4) * C_BLK * 4 bytes ≈ 50 KB at C_BLK=1024, l_max=6 — far under
+  VMEM).  It is mined per zone (``vmap`` over a padded [Z, e_cap] batch),
+  so a multi-bucket :class:`~repro.core.tzp.ZoneBatchLayout` costs one
+  launch *per bucket*.
+
+**Fused bucket-native kernel** (:func:`fused_zone_scan_flat`) — a single
+launch whose 1-D grid spans *every* bucket of a layout at once.  The host
+concatenates all buckets' padded zone rows into one flat slot stream
+(``repro.core.tzp.concat_layout``); candidate blocks of ``blk`` lanes tile
+the stream, and a per-block descriptor (``hi``) bounds each block's sweep
+to the flat span of the zones its lanes belong to.  Blocks may straddle
+zones and buckets: a per-slot ``zone_id`` gates every extension/seed/
+time-out to same-zone edges, so inert padding rows and foreign zones are
+masked rather than aligned away.  Candidate state lives in a pure
+``fori_loop`` carry (no cross-grid-step scratch), which keeps the kernel
+portable across the interpreter, Triton (GPU), and Mosaic.
+
+**Live-window block skipping** (beyond-paper, both kernels' key
+optimization): a (candidate-block x edge-chunk) cell is skipped when
+
+  * every edge index in the chunk precedes every candidate in the block
+    (those candidates are not yet seeded: extensions need edge_idx > seed
+    — the fused kernel gets this for free by starting each block's sweep
+    at its own base), or
+  * the chunk's earliest timestamp exceeds the block's last seed time by
+    more than ``l_max * delta`` (every candidate's lifetime is over —
+    Lemma 4.1's span bound).  The dense kernel reads the chunk's first
+    timestamp (edges are time-sorted within a zone); the fused kernel
+    reduces a masked min over the chunk, which stays conservative even
+    where the concatenated stream is not globally time-sorted.
+
+Edges are time-sorted within each zone, so a candidate is live for
+~``1/omega`` of its zone and skipping turns the dense O(E^2) sweep into
+O(E^2 / omega) — measured in EXPERIMENTS.md §Perf.
 """
 
 from __future__ import annotations
@@ -37,8 +64,84 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import encoding
+from repro.kernels.common import resolve_interpret
 
 DIGITS_PER_LIMB = encoding.DIGITS_PER_LIMB
+
+_I32_MIN = jnp.iinfo(jnp.int32).min
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _edge_update(state, *, u, v, t, seed, gate, delta, l_max, iota_k,
+                 li_iota):
+    """Apply one edge to a candidate block's expansion state.
+
+    The single copy of the Phase-1 transition rule shared by the dense and
+    fused kernels.  ``state`` is ``(length, last_t, done, n_nodes, nodes,
+    code)`` — int32 arrays of shape [1, C] (nodes [K, C], code [L, C]).
+
+    Args:
+      u, v, t: this edge's scalars (int32).
+      seed: bool[1, C] — lanes seeded by this edge (its own slot; already
+        gated on the edge being valid).
+      gate: bool — per-lane eligibility of this edge for extension and
+        time-out (edge validity, and for the fused kernel same-zone
+        membership).  Scalar or [1, C]; broadcasting handles both.
+    """
+    length, last_t, done, n_nodes, nodes, code = state
+    k = iota_k.shape[0]
+
+    active = (length > 0) & ~done
+    gap_ok = (t > last_t) & (t - last_t <= delta)
+    timed_out = active & (t - last_t > delta) & gate
+
+    u_hit = nodes == u
+    v_hit = nodes == v
+    u_in = u_hit.any(axis=0, keepdims=True)
+    v_in = v_hit.any(axis=0, keepdims=True)
+    extend = (
+        active & ~timed_out & gap_ok & (length < l_max)
+        & (u_in | v_in) & gate
+    )
+
+    u_pos = jnp.min(jnp.where(u_hit, iota_k, k), axis=0, keepdims=True)
+    v_pos = jnp.min(jnp.where(v_hit, iota_k, k), axis=0, keepdims=True)
+    label_u = jnp.where(u_in, u_pos, n_nodes)
+    nn1 = n_nodes + (~u_in).astype(jnp.int32)
+    same_uv = u == v
+    label_v = jnp.where(same_uv, label_u,
+                        jnp.where(v_in, v_pos, nn1))
+    nn2 = jnp.where(same_uv, nn1, nn1 + (~v_in).astype(jnp.int32))
+
+    put_u = extend & ~u_in
+    put_v = extend & ~v_in & ~same_uv
+    nodes = jnp.where(put_u & (iota_k == n_nodes), u, nodes)
+    nodes = jnp.where(put_v & (iota_k == nn1), v, nodes)
+
+    # append the two digits (label+1) at positions 2*len, 2*len+1
+    for which, label in ((0, label_u), (1, label_v)):
+        pos = 2 * length + which
+        limb_idx = pos // DIGITS_PER_LIMB
+        shift = 4 * (DIGITS_PER_LIMB - 1 - pos % DIGITS_PER_LIMB)
+        add = jnp.where(extend, jnp.left_shift(label + 1, shift), 0)
+        code = code + jnp.where(li_iota == limb_idx, add, 0)
+
+    new_length = length + extend.astype(jnp.int32)
+    new_last_t = jnp.where(extend, t, last_t)
+    new_nn = jnp.where(extend, nn2, n_nodes)
+
+    # seed the candidate owned by this edge
+    new_length = jnp.where(seed, 1, new_length)
+    new_last_t = jnp.where(seed, t, new_last_t)
+    new_nn = jnp.where(seed, jnp.where(same_uv, 1, 2), new_nn)
+    nodes = jnp.where(seed & (iota_k == 0), u, nodes)
+    nodes = jnp.where(seed & (iota_k == 1) & ~same_uv, v, nodes)
+    seed_digit0 = 1 << (4 * (DIGITS_PER_LIMB - 1))
+    seed_digit1 = jnp.where(same_uv, 1, 2) << (4 * (DIGITS_PER_LIMB - 2))
+    seed_code = jnp.where(li_iota == 0, seed_digit0 + seed_digit1, 0)
+    code = jnp.where(seed, seed_code, code)
+
+    return (new_length, new_last_t, done | timed_out, new_nn, nodes, code)
 
 
 def _kernel(
@@ -71,6 +174,7 @@ def _kernel(
     def _sweep():
         iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, c_blk), 1) + c_base
         iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, c_blk), 0)
+        li_iota = jax.lax.broadcasted_iota(jnp.int32, (limbs, c_blk), 0)
 
         def body(j, _):
             u = u_ref[0, j]
@@ -78,78 +182,19 @@ def _kernel(
             t = t_ref[0, j]
             valid = valid_ref[0, j] != 0
 
-            length = length_ref[...]
-            last_t = last_t_ref[...]
-            done = done_ref[...] != 0
-            n_nodes = nn_ref[...]
-            nodes = nodes_ref[...]
-
-            active = (length > 0) & ~done
-            gap_ok = (t > last_t) & (t - last_t <= delta)
-            timed_out = active & (t - last_t > delta) & valid
-
-            u_hit = nodes == u
-            v_hit = nodes == v
-            u_in = u_hit.any(axis=0, keepdims=True)
-            v_in = v_hit.any(axis=0, keepdims=True)
-            extend = (
-                active & ~timed_out & gap_ok & (length < l_max)
-                & (u_in | v_in) & valid
+            state = (
+                length_ref[...], last_t_ref[...], done_ref[...] != 0,
+                nn_ref[...], nodes_ref[...], code_ref[...],
             )
-
-            u_pos = jnp.min(jnp.where(u_hit, iota_k, k), axis=0,
-                            keepdims=True)
-            v_pos = jnp.min(jnp.where(v_hit, iota_k, k), axis=0,
-                            keepdims=True)
-            label_u = jnp.where(u_in, u_pos, n_nodes)
-            nn1 = n_nodes + (~u_in).astype(jnp.int32)
-            same_uv = u == v
-            label_v = jnp.where(same_uv, label_u,
-                                jnp.where(v_in, v_pos, nn1))
-            nn2 = jnp.where(same_uv, nn1, nn1 + (~v_in).astype(jnp.int32))
-
-            put_u = extend & ~u_in
-            put_v = extend & ~v_in & ~same_uv
-            local_k = iota_k  # broadcast helper over node slots
-            nodes = jnp.where(put_u & (local_k == n_nodes), u, nodes)
-            nodes = jnp.where(put_v & (local_k == nn1), v, nodes)
-
-            # append the two digits (label+1) at positions 2*len, 2*len+1
-            code = code_ref[...]
-            li_iota = jax.lax.broadcasted_iota(
-                jnp.int32, (limbs, c_blk), 0
+            length, last_t, done, nn, nodes, code = _edge_update(
+                state, u=u, v=v, t=t,
+                seed=(iota_c == e_base + j) & valid, gate=valid,
+                delta=delta, l_max=l_max, iota_k=iota_k, li_iota=li_iota,
             )
-            for which, label in ((0, label_u), (1, label_v)):
-                pos = 2 * length + which
-                limb_idx = pos // DIGITS_PER_LIMB
-                shift = 4 * (DIGITS_PER_LIMB - 1 - pos % DIGITS_PER_LIMB)
-                add = jnp.where(
-                    extend, jnp.left_shift(label + 1, shift), 0
-                )
-                code = code + jnp.where(li_iota == limb_idx, add, 0)
-
-            new_length = length + extend.astype(jnp.int32)
-            new_last_t = jnp.where(extend, t, last_t)
-            new_nn = jnp.where(extend, nn2, n_nodes)
-
-            # seed the candidate owned by this edge
-            seed = (iota_c == e_base + j) & valid
-            new_length = jnp.where(seed, 1, new_length)
-            new_last_t = jnp.where(seed, t, new_last_t)
-            new_nn = jnp.where(seed, jnp.where(same_uv, 1, 2), new_nn)
-            nodes = jnp.where(seed & (local_k == 0), u, nodes)
-            nodes = jnp.where(seed & (local_k == 1) & ~same_uv, v, nodes)
-            seed_digit0 = 1 << (4 * (DIGITS_PER_LIMB - 1))
-            seed_digit1 = jnp.where(same_uv, 1, 2) << (
-                4 * (DIGITS_PER_LIMB - 2)
-            )
-            seed_code = jnp.where(li_iota == 0, seed_digit0 + seed_digit1, 0)
-            code = jnp.where(seed, seed_code, code)
-
-            length_ref[...] = new_length
-            last_t_ref[...] = new_last_t
-            done_ref[...] = (done | timed_out).astype(jnp.int32)
-            nn_ref[...] = new_nn
+            length_ref[...] = length
+            last_t_ref[...] = last_t
+            done_ref[...] = done.astype(jnp.int32)
+            nn_ref[...] = nn
             nodes_ref[...] = nodes
             code_ref[...] = code
             return 0
@@ -173,8 +218,7 @@ def zone_scan_pallas(
     Returns:
       (code int32[E, L], length int32[E]) per seed candidate.
     """
-    if interpret is None:
-        interpret = jax.default_backend() == "cpu"
+    interpret = resolve_interpret(interpret)
     e = u.shape[0]
     limbs = encoding.n_limbs(l_max)
     k = l_max + 1
@@ -190,7 +234,7 @@ def zone_scan_pallas(
         valid_i = jnp.pad(valid_i, (0, pad))
     # normalize padding timestamps (invalid slots) to the max valid time so
     # block skipping stays conservative; padded edges are semantically inert.
-    t_fill = jnp.max(jnp.where(valid_i != 0, t, jnp.iinfo(jnp.int32).min))
+    t_fill = jnp.max(jnp.where(valid_i != 0, t, _I32_MIN))
     t = jnp.where(valid_i != 0, t, t_fill)
 
     n_c_blocks = e_pad // c_blk
@@ -232,3 +276,164 @@ def zone_scan_pallas(
     )(t2, u2, v2, t2, valid2)
 
     return code.T[:e], length[0, :e]
+
+
+# ---------------------------------------------------------------------------
+# Fused bucket-native kernel: one launch over a concatenated ragged layout.
+# ---------------------------------------------------------------------------
+
+
+def _fused_kernel(
+    hi_ref, u_ref, v_ref, t_ref, valid_ref, zid_ref,
+    lane_t_ref, lane_valid_ref, lane_zid_ref,
+    code_out_ref, len_out_ref,
+    *, delta: int, l_max: int, blk: int,
+):
+    """One candidate block of the concatenated flat slot stream.
+
+    Grid is 1-D over candidate blocks; the flat edge arrays arrive whole
+    (constant index map) and are chunk-loaded with dynamic slices, so the
+    sweep span ``[base, hi)`` can differ per block — that is what makes
+    the ragged layout a *single* launch.  Candidate state is a pure
+    ``fori_loop`` carry: no scratch persists across grid steps, so the
+    kernel has no sequential-grid requirement.
+    """
+    i = pl.program_id(0)
+    base = i * blk
+    limbs = code_out_ref.shape[0]
+    k = l_max + 1
+
+    hi = hi_ref[0, 0]                       # blk-aligned sweep end
+    lane_t = lane_t_ref[...]                # [1, blk] seed times
+    lane_valid = lane_valid_ref[...] != 0
+    lane_zid = lane_zid_ref[...]
+    iota_lane = jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1) + base
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, blk), 0)
+    li_iota = jax.lax.broadcasted_iota(jnp.int32, (limbs, blk), 0)
+
+    # latest seed time among this block's real lanes: the Lemma-4.1 horizon
+    t_seed_max = jnp.max(jnp.where(lane_valid, lane_t, _I32_MIN))
+
+    state0 = (
+        jnp.zeros((1, blk), jnp.int32),            # length
+        jnp.zeros((1, blk), jnp.int32),            # last_t
+        jnp.zeros((1, blk), bool),                 # done
+        jnp.zeros((1, blk), jnp.int32),            # n_nodes
+        jnp.full((k, blk), -1, jnp.int32),         # nodes
+        jnp.zeros((limbs, blk), jnp.int32),        # code
+    )
+
+    def chunk_body(ci, state):
+        off = base + ci * blk
+        cu = u_ref[0, pl.ds(off, blk)]
+        cv = v_ref[0, pl.ds(off, blk)]
+        ct = t_ref[0, pl.ds(off, blk)]
+        cvalid = valid_ref[0, pl.ds(off, blk)]
+        czid = zid_ref[0, pl.ds(off, blk)]
+
+        # time skip: every valid edge in the chunk is beyond the horizon.
+        # A masked min stays conservative on the (not globally time-sorted)
+        # concatenated stream; the first chunk contains the lanes
+        # themselves, so min <= t_seed_max there and seeds are never lost.
+        min_t = jnp.min(jnp.where(cvalid != 0, ct, _I32_MAX))
+        live = min_t <= t_seed_max + l_max * delta
+
+        def sweep(st):
+            def body(j, s):
+                u = cu[j]
+                v = cv[j]
+                t = ct[j]
+                evalid = cvalid[j] != 0
+                return _edge_update(
+                    s, u=u, v=v, t=t,
+                    seed=(iota_lane == off + j) & evalid,
+                    gate=evalid & (czid[j] == lane_zid),
+                    delta=delta, l_max=l_max, iota_k=iota_k,
+                    li_iota=li_iota,
+                )
+            return jax.lax.fori_loop(0, blk, body, st)
+
+        return jax.lax.cond(live, sweep, lambda s: s, state)
+
+    # index skip is structural: the sweep starts at this block's own base
+    # (edges before a candidate's seed slot can never extend it — within a
+    # zone they are not strictly later in time), and ends at the last
+    # lane's zone end.
+    n_chunks = (hi - base) // blk
+    length, _, _, _, _, code = jax.lax.fori_loop(0, n_chunks, chunk_body,
+                                                 state0)
+    code_out_ref[...] = code
+    len_out_ref[...] = length
+
+
+def fused_zone_scan_flat(
+    u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
+    blk: int = 512, interpret: bool | None = None,
+):
+    """Single-launch ragged zone scan over a concatenated flat slot stream.
+
+    Args:
+      u, v, t: int32[S] flat edge slots — every bucket's padded [Z_b,
+        e_cap_b] rows flattened and concatenated (see
+        ``repro.core.tzp.concat_layout``).  S must be a multiple of
+        ``blk``.
+      valid: int32/bool[S] — real-edge mask (padding slots are 0).
+      zone_id: int32[S] — owning zone row per slot (-1 for stream pad);
+        gates extensions/seeds/time-outs to same-zone edges.
+      hi: int32[S // blk] — per candidate block, the blk-aligned flat
+        index one past the last zone any of its lanes belongs to (the
+        block's sweep bound).
+
+    Returns:
+      (code int32[S, L], length int32[S]) per seed candidate slot.
+    """
+    interpret = resolve_interpret(interpret)
+    s_pad = u.shape[0]
+    if s_pad % blk:
+        raise ValueError(
+            f"flat slot count {s_pad} is not a multiple of blk {blk}")
+    n_blocks = s_pad // blk
+    if hi.shape[0] != n_blocks:
+        raise ValueError(
+            f"descriptor hi has {hi.shape[0]} entries for {n_blocks} "
+            f"candidate blocks")
+    limbs = encoding.n_limbs(l_max)
+
+    valid_i = valid.astype(jnp.int32)
+    row = lambda x: x.reshape(1, s_pad)
+    u2, v2, t2 = row(u), row(v), row(t)
+    valid2, zid2 = row(valid_i), row(zone_id)
+    hi2 = hi.reshape(1, n_blocks)
+
+    whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+    per_block = lambda rows: pl.BlockSpec((rows, blk), lambda i: (0, i))
+
+    kernel = functools.partial(
+        _fused_kernel, delta=delta, l_max=l_max, blk=blk,
+    )
+    code, length = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, i)),     # hi descriptor
+            whole((1, s_pad)),                          # u (full stream)
+            whole((1, s_pad)),                          # v
+            whole((1, s_pad)),                          # t
+            whole((1, s_pad)),                          # valid
+            whole((1, s_pad)),                          # zone_id
+            per_block(1),                               # lane seed times
+            per_block(1),                               # lane validity
+            per_block(1),                               # lane zone ids
+        ],
+        out_specs=[
+            per_block(limbs),
+            per_block(1),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((limbs, s_pad), jnp.int32),
+            jax.ShapeDtypeStruct((1, s_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(hi2, u2, v2, t2, valid2, zid2, t2, valid2, zid2)
+
+    return code.T, length[0]

@@ -268,6 +268,142 @@ def test_layout_overflow_names_offending_bucket():
 
 
 # ---------------------------------------------------------------------------
+# Fused single-launch path: one kernel launch == per-bucket == oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("layout", ["dense", "bucketed"])
+def test_fused_matches_per_bucket_and_oracle(layout):
+    """run_layout(fused=True) — one bucket-native launch with the Phase-2
+    fold on-device — must be code-for-code identical to the per-bucket
+    path and the standalone numpy oracle, on the >= 3-bucket power-law
+    corpus (interpret mode on CPU)."""
+    g = _powerlaw_bursty(seed=5)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout=layout)
+    if layout == "bucketed":
+        assert lay.n_buckets >= 3, lay.bucket_shapes()
+    ex = MiningExecutor(delta=delta, l_max=l_max, backend="pallas")
+    fused = _dict(ex.run_layout(lay, fused=True))
+    assert ex.last_run_stats["path"] == "fused"
+    assert ex.last_run_stats["launches"] == 1
+    per_bucket = _dict(ex.run_layout(lay, fused=False))
+    assert ex.last_run_stats["path"] == "per-bucket"
+    assert ex.last_run_stats["launches"] == lay.n_buckets
+    assert fused == per_bucket, "fused != per-bucket"
+    expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
+    assert fused == expect, "fused != oracle"
+
+
+def test_fused_survives_tiny_merge_cap_retry():
+    """The on-device bounded fold spills exactly and the host retry with a
+    doubled cap must converge to exact counts from any starting cap."""
+    g = _powerlaw_bursty(seed=8, n=160)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    base = MiningExecutor(delta=delta, l_max=l_max, backend="pallas")
+    tiny = MiningExecutor(delta=delta, l_max=l_max, backend="pallas",
+                          merge_cap=8)
+    with pytest.warns(RuntimeWarning, match="fused on-device merge spilled"):
+        got = _dict(tiny.run_layout(lay, fused=True))
+    assert tiny.last_run_stats["spill_retries"] >= 1
+    assert tiny.last_run_stats["launches"] == 1
+    assert got == _dict(base.run_layout(lay, fused=True))
+
+
+def test_fused_dispatch_policy():
+    """"auto" fuses exactly when the backend has a flat kernel; forcing
+    fused on a backend without one is an error, not a silent fallback."""
+    kw = dict(delta=12, l_max=3)
+    assert MiningExecutor(backend="pallas", **kw).resolve_fused() is True
+    assert MiningExecutor(backend="ref", **kw).resolve_fused() is False
+    assert MiningExecutor(backend="numpy", **kw).resolve_fused() is False
+    assert MiningExecutor(backend="pallas", fused="off",
+                          **kw).resolve_fused() is False
+    with pytest.raises(ValueError, match="no fused single-launch scan"):
+        MiningExecutor(backend="ref", **kw).resolve_fused(True)
+    with pytest.raises(ValueError, match="no fused single-launch scan"):
+        MiningExecutor(backend="ref", fused="on", **kw).resolve_fused()
+    with pytest.raises(ValueError, match="unknown fused mode"):
+        MiningExecutor(backend="ref", fused="always", **kw)
+
+
+def test_fused_engine_single_launch_and_cache():
+    """Through the engine: a pallas discover is served by ONE launch, the
+    result records it, and a repeated discover is a compile-cache hit on
+    the fused execution key."""
+    from repro.core.engine import PTMTEngine
+
+    g = _powerlaw_bursty(seed=5)
+    eng = PTMTEngine(delta=12, l_max=3, omega=2, backend="pallas")
+    res = eng.discover(g)
+    assert res.layout["execution"]["path"] == "fused"
+    assert res.layout["execution"]["launches"] == 1
+    assert eng.stats.fused_runs == 1
+    assert eng.stats.launches == 1
+    ref = PTMTEngine(delta=12, l_max=3, omega=2, backend="ref").discover(g)
+    assert res.counts == ref.counts
+    eng.discover(g)
+    assert eng.stats.compile_cache_hits == 1
+    assert eng.stats.launches == 2
+
+
+# ---------------------------------------------------------------------------
+# pad_policy="pad" x bucketed layout (regression: shared pad_zone_arrays).
+# ---------------------------------------------------------------------------
+
+
+def test_pad_zone_arrays_appends_inert_rows():
+    """The shared helper pads with all-invalid zero-sign rows and is a
+    no-op at the current row count."""
+    g = _bursty(seed=3, n=80)
+    plan = tzp.plan_zones(g, delta=20, l_max=4, omega=2)
+    batch = tzp.build_zone_batch(g, plan)
+    z = batch.n_zones
+    u, v, t, valid, signs = tzp.pad_zone_arrays(
+        batch.u, batch.v, batch.t, batch.valid, batch.sign, n_rows=z + 3)
+    assert u.shape[0] == z + 3
+    assert not valid[z:].any() and not signs[z:].any()
+    same = tzp.pad_zone_arrays(batch.u, batch.v, batch.t, batch.valid,
+                               batch.sign, n_rows=z)
+    assert all(a is b for a, b in
+               zip(same, (batch.u, batch.v, batch.t, batch.valid,
+                          batch.sign)))
+    with pytest.raises(ValueError, match="cannot pad"):
+        tzp.pad_zone_arrays(batch.u, batch.v, batch.t, batch.valid,
+                            batch.sign, n_rows=z - 1)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_pad_policy_with_bucketed_layout_non_divisor_chunk(backend):
+    """A zone_chunk that divides no bucket's zone count exercises the pad
+    path on every bucket of a bucketed layout; counts must match the
+    unchunked run exactly, and pad_policy='raise' must refuse."""
+    g = _powerlaw_bursty(seed=5)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    assert lay.n_buckets >= 3
+    # pick a chunk size that divides none of the buckets' zone counts
+    chunk = 4
+    assert all(b.n_zones % chunk for b in lay.buckets), lay.bucket_shapes()
+    base = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                          zone_chunk=0)
+    padded = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                            zone_chunk=chunk, pad_policy="pad")
+    got = _dict(padded.run_layout(lay, fused=False))
+    assert got == _dict(base.run_layout(lay, fused=False))
+    from repro.core.executor import ZoneChunkError
+
+    strict = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
+                            zone_chunk=chunk, pad_policy="raise")
+    with pytest.raises(ZoneChunkError, match="not divisible"):
+        strict.run_layout(lay, fused=False)
+
+
+# ---------------------------------------------------------------------------
 # Overflow must never masquerade as exact counts (regression).
 # ---------------------------------------------------------------------------
 

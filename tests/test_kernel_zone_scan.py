@@ -86,3 +86,30 @@ def test_kernel_end_to_end_discovery():
     keys = set(expect) | set(got.counts)
     bad = {k for k in keys if expect.get(k, 0) != got.counts.get(k, 0)}
     assert not bad
+
+
+@pytest.mark.parametrize("layout,blk", [("bucketed", 64), ("dense", 128)])
+def test_fused_flat_kernel_matches_ref(layout, blk):
+    """Single-launch flat-stream kernel == per-zone reference scan
+    scattered back to slot positions (zone gating + chunk skip exact)."""
+    g = sg.bursty_stream(600, 14, seed=9)
+    plan = tzp.plan_zones(g, delta=60, l_max=4, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout=layout)
+    fl = tzp.concat_layout(lay, blk=blk)
+    code, length = ops.scan_flat(fl.u, fl.v, fl.t, fl.valid, fl.zone_id,
+                                 fl.hi, delta=60, l_max=4, blk=blk)
+    a = ref.scan_flat_ref(fl.u, fl.v, fl.t, fl.valid, fl.zone_id,
+                          delta=60, l_max=4)
+    np.testing.assert_array_equal(np.asarray(code), a.code)
+    np.testing.assert_array_equal(np.asarray(length), a.length)
+
+
+def test_fused_flat_kernel_all_pad_stream():
+    """An all-padding stream (no real zones) yields zero lengths."""
+    s = 128
+    zeros = jnp.zeros(s, jnp.int32)
+    code, length = ops.scan_flat(
+        zeros, zeros, zeros, zeros, jnp.full(s, -1, jnp.int32),
+        jnp.asarray([s], jnp.int32), delta=5, l_max=3, blk=128)
+    assert not np.asarray(length).any()
+    assert not np.asarray(code).any()
