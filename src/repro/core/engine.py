@@ -37,6 +37,8 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs import get_obs
+
 from . import tzp
 from .api import DiscoveryResult, counts_to_result
 from .config import MiningConfig
@@ -49,7 +51,15 @@ __all__ = ["EngineStats", "PTMTEngine"]
 
 @dataclasses.dataclass
 class EngineStats:
-    """Observable engine counters (mutated in place, cheap to read)."""
+    """Observable engine counters (mutated in place, cheap to read).
+
+    This dataclass is the stable, zero-dependency *view* of the engine's
+    execution history — its fields and meanings are unchanged by the
+    observability layer.  When the engine is built with a live
+    :class:`repro.obs.Observability` bundle, every increment here is
+    mirrored into the bundle's metrics registry
+    (``repro_mining_compile_cache_hits_total`` etc.), so Prometheus
+    exports and ``EngineStats`` always agree."""
 
     discover_calls: int = 0
     sequential_calls: int = 0
@@ -83,13 +93,19 @@ class PTMTEngine:
     are best-effort under races.
     """
 
-    def __init__(self, config: MiningConfig | None = None, **overrides):
+    def __init__(self, config: MiningConfig | None = None, *, obs=None,
+                 **overrides):
         if config is None:
             config = MiningConfig(**overrides)
         elif overrides:
             config = config.with_updates(**overrides)
         self.config = config
-        self.executor = MiningExecutor.from_config(config)
+        # obs is deliberately NOT a MiningConfig field: the config is a
+        # frozen hashable value object, an Observability bundle is live
+        # mutable state.  It rides alongside instead, threaded into the
+        # executor (and from there into streaming miners and layouts).
+        self.obs = get_obs(obs)
+        self.executor = MiningExecutor.from_config(config, obs=self.obs)
         self.stats = EngineStats()
         self._seen_keys: set[tuple] = set()
         self._mesh_steps: dict[tuple, object] = {}
@@ -119,9 +135,13 @@ class PTMTEngine:
         poison the reuse counters the bench and CI assert on)."""
         if key in self._seen_keys:
             self.stats.compile_cache_hits += 1
+            self.obs.metrics.counter(
+                "repro_mining_compile_cache_hits_total").inc()
         else:
             self._seen_keys.add(key)
             self.stats.compile_cache_misses += 1
+            self.obs.metrics.counter(
+                "repro_mining_compile_cache_misses_total").inc()
         self.stats.zones_mined += n_zones
 
     def capacity_plan(self, n_zones: int, e_cap: int):
@@ -149,24 +169,30 @@ class PTMTEngine:
         plan = self._zone_plans.get(key)
         if plan is not None:
             self.stats.plan_cache_hits += 1
+            self.obs.metrics.counter(
+                "repro_mining_plan_cache_hits_total").inc()
             self._zone_plans[key] = self._zone_plans.pop(key)  # LRU bump
             return plan
-        plan = tzp.plan_zones(graph, delta=cfg.delta, l_max=cfg.l_max,
-                              omega=cfg.omega, e_cap=cfg.e_cap)
+        with self.obs.tracer.span("engine.plan", n_edges=graph.n_edges):
+            plan = tzp.plan_zones(graph, delta=cfg.delta, l_max=cfg.l_max,
+                                  omega=cfg.omega, e_cap=cfg.e_cap)
         self._zone_plans[key] = plan
         while len(self._zone_plans) > self._zone_plan_cap:
             self._zone_plans.pop(next(iter(self._zone_plans)))
         self.stats.plan_cache_misses += 1
+        self.obs.metrics.counter("repro_mining_plan_cache_misses_total").inc()
         return plan
 
     def _plan_and_layout(self, graph: TemporalGraph, n_shards: int = 1):
         cfg = self.config
         plan = self.plan_zones(graph)
         pad_zones = (self.executor.zone_chunk or 1) * n_shards
-        layout = tzp.build_zone_layout(graph, plan, layout=cfg.zone_layout,
-                                       e_cap=cfg.e_cap,
-                                       pad_zones_to=pad_zones,
-                                       n_shards=n_shards)
+        with self.obs.tracer.span("engine.layout", n_zones=plan.n_zones):
+            layout = tzp.build_zone_layout(graph, plan,
+                                           layout=cfg.zone_layout,
+                                           e_cap=cfg.e_cap,
+                                           pad_zones_to=pad_zones,
+                                           n_shards=n_shards)
         return plan, layout
 
     def _note_layout(self, layout: tzp.ZoneBatchLayout) -> None:
@@ -184,11 +210,14 @@ class PTMTEngine:
         graph skip planning (``stats.plan_cache_hits``).
         """
         self.stats.discover_calls += 1
-        plan, layout = self._plan_and_layout(graph)
-        keys = self.executor.layout_execution_keys(layout)
-        counts = self.executor.run_layout(
-            layout, allow_overflow=self.config.allow_overflow)
-        run_stats = self.executor.last_run_stats
+        with self.obs.tracer.span("engine.discover",
+                                  n_edges=graph.n_edges) as sp:
+            plan, layout = self._plan_and_layout(graph)
+            keys = self.executor.layout_execution_keys(layout)
+            counts = self.executor.run_layout(
+                layout, allow_overflow=self.config.allow_overflow)
+            run_stats = self.executor.last_run_stats
+            sp.set(n_zones=plan.n_zones, path=run_stats.get("path"))
         if run_stats.get("path") == "fused":
             # one launch, one executable: the whole layout resolves to a
             # single fused execution key
@@ -239,8 +268,9 @@ class PTMTEngine:
         self.stats.stream_sessions += 1
         if overrides:
             return StreamingMiner(config=self.config.with_updates(
-                **overrides))
-        return StreamingMiner(config=self.config, executor=self.executor)
+                **overrides), obs=self.obs)
+        return StreamingMiner(config=self.config, executor=self.executor,
+                              obs=self.obs)
 
     # -- mesh path ----------------------------------------------------------
 

@@ -62,6 +62,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.obs import get_obs
+
 from . import aggregation, backends, encoding, planner
 from .aggregation import CodeCounts
 from .tzp import (ZoneBatch, ZoneBatchLayout, concat_layout,
@@ -80,6 +82,7 @@ def merge_partial_counts(
     *,
     merge_cap: int | None = None,
     warn_label: str = "partial",
+    obs=None,
 ) -> CodeCounts:
     """Fold per-bucket (or per-shard) count tables through ``merge_bounded``.
 
@@ -92,6 +95,7 @@ def merge_partial_counts(
     ceiling (total live rows + 1 slot for the all-zero padding group), so
     the result is always exact.
     """
+    obs = get_obs(obs)
     parts = list(parts)
     if not parts:
         raise ValueError("merge_partial_counts needs at least one table")
@@ -101,23 +105,27 @@ def merge_partial_counts(
     ceiling = sum(int(p.unique_mask.sum()) for p in parts) + 1
     cap = min(int(merge_cap), ceiling) if merge_cap else ceiling
     cap = max(cap, 8)
-    while True:
-        carry = aggregation.empty_counts(cap, limbs)
-        spilled = jnp.zeros((), jnp.int32)
-        for part in parts:
-            carry, spill = aggregation.merge_bounded(carry, part, cap=cap)
-            spilled = spilled + spill
-        n_spilled = int(spilled)
-        if n_spilled == 0:
-            return carry
-        need = max(2 * cap, cap + n_spilled, 8)
-        new_cap = min(1 << (need - 1).bit_length(), ceiling)
-        warnings.warn(
-            f"{warn_label} merge spilled {n_spilled} unique code(s) at "
-            f"merge_cap={cap}; retrying with merge_cap={new_cap}",
-            RuntimeWarning, stacklevel=3,
-        )
-        cap = new_cap
+    with obs.tracer.span("mine.fold", parts=len(parts)) as sp:
+        while True:
+            carry = aggregation.empty_counts(cap, limbs)
+            spilled = jnp.zeros((), jnp.int32)
+            for part in parts:
+                carry, spill = aggregation.merge_bounded(carry, part, cap=cap)
+                spilled = spilled + spill
+            n_spilled = int(spilled)
+            if n_spilled == 0:
+                sp.set(merge_cap=cap).sync(carry)
+                return carry
+            need = max(2 * cap, cap + n_spilled, 8)
+            new_cap = min(1 << (need - 1).bit_length(), ceiling)
+            warnings.warn(
+                f"{warn_label} merge spilled {n_spilled} unique code(s) at "
+                f"merge_cap={cap}; retrying with merge_cap={new_cap}",
+                RuntimeWarning, stacklevel=3,
+            )
+            obs.metrics.counter("repro_mining_spill_retries_total",
+                                path="fold").inc()
+            cap = new_cap
 
 
 class ZoneChunkError(ValueError):
@@ -343,6 +351,7 @@ class MiningExecutor:
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
         fused: str = "auto",
+        obs=None,
     ):
         if pad_policy not in ("pad", "raise"):
             raise ValueError(f"unknown pad_policy {pad_policy!r}")
@@ -370,9 +379,12 @@ class MiningExecutor:
         self.fused_blk = backends.FUSED_BLK_DEFAULT
         self.last_run_stats: dict = {}
         self._plan_cache: dict[tuple, object] = {}
+        # observability bundle: NULL_OBS by default (shared no-op
+        # singletons), so the hot paths below emit unconditionally
+        self.obs = get_obs(obs)
 
     @classmethod
-    def from_config(cls, config) -> "MiningExecutor":
+    def from_config(cls, config, *, obs=None) -> "MiningExecutor":
         """Build an executor from a :class:`repro.core.config.MiningConfig`.
 
         Duck-typed (any object with the execution fields works) so this
@@ -385,6 +397,7 @@ class MiningExecutor:
             merge_cap=config.merge_cap,
             memory_budget_mb=config.memory_budget_mb,
             fused=getattr(config, "fused", "auto"),
+            obs=obs,
         )
 
     @property
@@ -605,17 +618,24 @@ class MiningExecutor:
         if self.resolve_fused(fused):
             return self.run_fused(layout, allow_overflow=allow_overflow)
         self.check_layout_overflow(layout, allow_overflow=allow_overflow)
-        parts = [
-            self.run_arrays(b.u, b.v, b.t, b.valid, b.sign, label=b.label)
-            for b in layout.buckets
-        ]
-        self.last_run_stats = {
-            "path": "per-bucket",
-            "launches": len(layout.buckets),
-            "spill_retries": 0,
-        }
-        return merge_partial_counts(parts, merge_cap=self.merge_cap,
-                                    warn_label="zone-layout bucket")
+        with self.obs.tracer.span("mine.layout", path="per-bucket",
+                                  buckets=layout.n_buckets):
+            parts = [
+                self.run_arrays(b.u, b.v, b.t, b.valid, b.sign,
+                                label=b.label)
+                for b in layout.buckets
+            ]
+            self.last_run_stats = {
+                "path": "per-bucket",
+                "launches": len(layout.buckets),
+                "spill_retries": 0,
+            }
+            self.obs.metrics.counter(
+                "repro_mining_launches_total",
+                path="per-bucket").inc(len(layout.buckets))
+            return merge_partial_counts(parts, merge_cap=self.merge_cap,
+                                        warn_label="zone-layout bucket",
+                                        obs=self.obs)
 
     # -- fused single-launch path -------------------------------------------
 
@@ -680,20 +700,34 @@ class MiningExecutor:
         (ceiling ``n_slots + 1``, which provably cannot spill).
         """
         self.check_layout_overflow(layout, allow_overflow=allow_overflow)
+        obs = self.obs
         blk, fold_chunk, _ = self._fused_geometry(layout)
         fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk)
         cap_ceiling = fl.n_slots + 1
         merge_cap = min(self._fused_merge_cap(fold_chunk), cap_ceiling)
-        arrays = tuple(jnp.asarray(x) for x in (
-            fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+        with obs.tracer.span("mine.h2d", n_slots=fl.n_slots) as sp:
+            arrays = tuple(jnp.asarray(x) for x in (
+                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+            sp.sync(arrays)
         retries = 0
         while True:
-            counts, spilled = _mine_fused_jit(
-                *arrays, delta=self.delta, l_max=self.l_max,
-                scan=self.spec.fused_scan, blk=blk, fold_chunk=fold_chunk,
-                merge_cap=merge_cap,
-            )
-            n_spilled = int(spilled)
+            # one span per launch attempt; the compile key changes when a
+            # spill retry doubles merge_cap (a genuine recompile), so the
+            # tracer's compile-vs-exec attribution stays honest
+            ck = ("fused", self.backend, self.delta, self.l_max,
+                  fl.n_slots, blk, fold_chunk, merge_cap) \
+                if obs.enabled else None
+            with obs.tracer.span("mine.fused", n_slots=fl.n_slots,
+                                 merge_cap=merge_cap, retry=retries,
+                                 compile_key=ck) as sp:
+                counts, spilled = _mine_fused_jit(
+                    *arrays, delta=self.delta, l_max=self.l_max,
+                    scan=self.spec.fused_scan, blk=blk,
+                    fold_chunk=fold_chunk, merge_cap=merge_cap,
+                )
+                sp.sync((counts, spilled))
+            with obs.tracer.span("mine.d2h"):
+                n_spilled = int(spilled)
             if n_spilled == 0:
                 self.last_run_stats = {
                     "path": "fused",
@@ -704,6 +738,13 @@ class MiningExecutor:
                     "n_slots": fl.n_slots,
                     "sweep_slots": fl.sweep_slots,
                 }
+                obs.metrics.counter("repro_mining_launches_total",
+                                    path="fused").inc()
+                m = obs.metrics
+                m.gauge("repro_mining_fused_merge_cap").set(merge_cap)
+                m.gauge("repro_mining_fused_fold_chunk").set(fold_chunk)
+                m.gauge("repro_mining_fused_slots").set(fl.n_slots)
+                m.gauge("repro_mining_fused_sweep_slots").set(fl.sweep_slots)
                 return counts
             need = max(2 * merge_cap, merge_cap + n_spilled, 8)
             new_cap = min(1 << (need - 1).bit_length(), cap_ceiling)
@@ -713,6 +754,8 @@ class MiningExecutor:
                 f"merge_cap={new_cap}",
                 RuntimeWarning, stacklevel=3,
             )
+            obs.metrics.counter("repro_mining_spill_retries_total",
+                                path="fused").inc()
             merge_cap = new_cap
             retries += 1
 
@@ -737,24 +780,35 @@ class MiningExecutor:
         u, v, t, valid, signs = (np.asarray(x)
                                  for x in (u, v, t, valid, signs))
         z, e = u.shape
-        zc = self._zone_chunk_for(z, e)
-        if zc and zc < z and z % zc != 0:
-            if self.pad_policy == "raise":
-                where = f" in bucket {label!r}" if label else ""
-                raise ZoneChunkError(
-                    f"zone count {z}{where} is not divisible by zone_chunk "
-                    f"{zc} (pad_policy='raise'); the trailing {z % zc} "
-                    f"zone(s) would need inert padding rows — pad the "
-                    f"batch (pad_policy='pad') or pick a divisor"
-                )
-            u, v, t, valid, signs = pad_zone_arrays(
-                u, v, t, valid, signs, n_rows=z + (zc - z % zc))
-            z = u.shape[0]
+        # compile key from the raw shape — execution_key replays the same
+        # pad/chunk resolution run below, so the tracer's compile-vs-exec
+        # attribution lines up with the engine's warm-call accounting
+        ck = self.execution_key(z, e) if self.obs.enabled else None
+        with self.obs.tracer.span("mine.launch", z=z, e=e, label=label,
+                                  compile_key=ck) as sp:
+            zc = self._zone_chunk_for(z, e)
+            if zc and zc < z and z % zc != 0:
+                if self.pad_policy == "raise":
+                    where = f" in bucket {label!r}" if label else ""
+                    raise ZoneChunkError(
+                        f"zone count {z}{where} is not divisible by "
+                        f"zone_chunk {zc} (pad_policy='raise'); the "
+                        f"trailing {z % zc} zone(s) would need inert "
+                        f"padding rows — pad the batch (pad_policy='pad') "
+                        f"or pick a divisor"
+                    )
+                u, v, t, valid, signs = pad_zone_arrays(
+                    u, v, t, valid, signs, n_rows=z + (zc - z % zc))
+                z = u.shape[0]
 
-        mode = self._agg_mode_for(zc, z)
-        if mode == "legacy":
-            return self._run_legacy(u, v, t, valid, signs, zc)
-        return self._run_bounded(u, v, t, valid, signs, zc, mode)
+            mode = self._agg_mode_for(zc, z)
+            sp.set(agg=mode, zone_chunk=zc)
+            if mode == "legacy":
+                counts = self._run_legacy(u, v, t, valid, signs, zc)
+            else:
+                counts = self._run_bounded(u, v, t, valid, signs, zc, mode)
+            sp.sync(counts)
+            return counts
 
     def _run_legacy(self, u, v, t, valid, signs, zc) -> CodeCounts:
         if not self.spec.jittable:
@@ -810,6 +864,8 @@ class MiningExecutor:
                 f"merge_cap={merge_cap}; retrying with merge_cap={new_cap}",
                 RuntimeWarning, stacklevel=3,
             )
+            self.obs.metrics.counter("repro_mining_spill_retries_total",
+                                     path="bucket").inc()
             merge_cap = new_cap
 
     def _fold_pipelined(self, u, v, t, valid, signs, zc, merge_cap):

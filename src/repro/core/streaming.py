@@ -34,6 +34,9 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import get_obs
+from repro.obs.timing import Stopwatch
+
 from . import transitions, tzp
 from .api import DiscoveryResult
 from .config import MiningConfig
@@ -57,18 +60,17 @@ def replay_stream(miner: "StreamingMiner", graph, chunk_edges: int):
     so both report the same metric.  Returns ``(latencies, total_seconds)``
     with one latency per ingested chunk.
     """
-    import time
-
     if chunk_edges < 1:
         raise ValueError("chunk_edges must be >= 1")
     latencies = []
-    t_start = time.perf_counter()
-    for i in range(0, graph.n_edges, chunk_edges):
-        t0 = time.perf_counter()
-        miner.ingest(graph.u[i:i + chunk_edges], graph.v[i:i + chunk_edges],
-                     graph.t[i:i + chunk_edges])
-        latencies.append(time.perf_counter() - t0)
-    return latencies, time.perf_counter() - t_start
+    with Stopwatch() as total:
+        for i in range(0, graph.n_edges, chunk_edges):
+            with Stopwatch() as sw:
+                miner.ingest(graph.u[i:i + chunk_edges],
+                             graph.v[i:i + chunk_edges],
+                             graph.t[i:i + chunk_edges])
+            latencies.append(sw.seconds)
+    return latencies, total.seconds
 
 
 class StreamingMiner:
@@ -105,6 +107,7 @@ class StreamingMiner:
         agg: str | None = None,
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
+        obs=None,
     ):
         legacy = {k: v for k, v in dict(
             delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
@@ -144,8 +147,13 @@ class StreamingMiner:
         self.e_cap = config.e_cap
         self.l_b = config.l_b
         self.l_g = self.omega * self.l_b
+        # obs resolution: an explicit bundle wins, else inherit the shared
+        # executor's (the engine.stream() path — one bundle across batch
+        # and stream modes), else the no-op default
+        self.obs = get_obs(obs) if obs is not None else (
+            executor.obs if executor is not None else get_obs(None))
         self.executor = executor if executor is not None \
-            else MiningExecutor.from_config(config)
+            else MiningExecutor.from_config(config, obs=self.obs)
 
         self._u = np.zeros(0, np.int32)     # sliding buffer: edges >= s
         self._v = np.zeros(0, np.int32)
@@ -172,6 +180,12 @@ class StreamingMiner:
         self.tail_cache_hits = 0
         self.tail_cache_misses = 0
         self.last_tail_layout: dict | None = None
+        # metric-label tag for multi-miner processes (the serving layer
+        # sets this to the tenant name); empty means unlabeled series
+        self.obs_label = ""
+
+    def _obs_labels(self) -> dict:
+        return {"miner": self.obs_label} if self.obs_label else {}
 
     # -- stream state -------------------------------------------------------
 
@@ -224,18 +238,25 @@ class StreamingMiner:
                 f"chunk starts at t={int(t[0])} before the stream head "
                 f"{self._t_head}; edges must arrive time-ordered"
             )
-        self._u = np.concatenate([self._u, u])
-        self._v = np.concatenate([self._v, v])
-        self._t = np.concatenate([self._t, t])
-        self._t_head = int(t[-1])
-        if self._s is None:
-            self._s = int(self._t[0])
-        self.n_edges_ingested += int(t.size)
-        self._advance()
-        sig = (self.closed_time, self.n_zones_finalized)
-        if sig != self._closed_sig:
-            self._closed_sig = sig
-            self._epoch += 1
+        with self.obs.tracer.span("stream.ingest", edges=int(t.size)):
+            self._u = np.concatenate([self._u, u])
+            self._v = np.concatenate([self._v, v])
+            self._t = np.concatenate([self._t, t])
+            self._t_head = int(t[-1])
+            if self._s is None:
+                self._s = int(self._t[0])
+            self.n_edges_ingested += int(t.size)
+            self._advance()
+            sig = (self.closed_time, self.n_zones_finalized)
+            if sig != self._closed_sig:
+                self._closed_sig = sig
+                self._epoch += 1
+        if self.obs.enabled:
+            labels = self._obs_labels()
+            m = self.obs.metrics
+            m.gauge("repro_streaming_epoch", **labels).set(self._epoch)
+            m.gauge("repro_streaming_buffered_edges",
+                    **labels).set(self.buffered_edges)
 
     def _advance(self) -> None:
         """Finalize every growth/boundary pair fully behind the frontier."""
@@ -307,12 +328,14 @@ class StreamingMiner:
             l_b=self.l_b,
         )
         # cap at a power of two so jit shapes stabilize across pairs
-        layout = tzp.build_zone_layout(
-            pair, plan, layout="dense",
-            e_cap=tzp.next_pow2(max(g_cnt, 8)),
-        )
-        counts = self.executor.run_layout(layout)
-        _merge_into(self._counts, transitions.device_counts_to_dict(counts))
+        with self.obs.tracer.span("stream.finalize", edges=g_cnt):
+            layout = tzp.build_zone_layout(
+                pair, plan, layout="dense",
+                e_cap=tzp.next_pow2(max(g_cnt, 8)),
+            )
+            counts = self.executor.run_layout(layout)
+            _merge_into(self._counts,
+                        transitions.device_counts_to_dict(counts))
         self.n_zones_finalized += 2
 
     # -- results ------------------------------------------------------------
@@ -334,11 +357,16 @@ class StreamingMiner:
         if not final and self._tail_cache is not None \
                 and self._tail_cache[:2] == (self._epoch, sig):
             self.tail_cache_hits += 1
+            self.obs.metrics.counter("repro_streaming_tail_cache_hits_total",
+                                     **self._obs_labels()).inc()
             _, _, tail_counts, tail_zones, tail_cap = self._tail_cache
         else:
             tail_counts, tail_zones, tail_cap = self._mine_tail(final)
             if not final:
                 self.tail_cache_misses += 1
+                self.obs.metrics.counter(
+                    "repro_streaming_tail_cache_misses_total",
+                    **self._obs_labels()).inc()
                 self._tail_cache = (self._epoch, sig, tail_counts,
                                     tail_zones, tail_cap)
         _merge_into(counts, tail_counts)
@@ -378,23 +406,26 @@ class StreamingMiner:
                                       side="left"))
         if cut == 0:
             return {}, 0, 0
-        # rebase to the tail start: int32-safe, shift-invariant
-        tail = TemporalGraph(
-            u=self._u[:cut], v=self._v[:cut],
-            t=(self._t[:cut] - self._t[0]).astype(np.int32),
-            n_nodes=int(max(self._u[:cut].max(initial=-1),
-                            self._v[:cut].max(initial=-1)) + 1),
-        )
-        plan = tzp.plan_zones(
-            tail, delta=self.delta, l_max=self.l_max,
-            omega=self.omega, e_cap=self.e_cap,
-        )
-        layout = tzp.build_zone_layout(
-            tail, plan, layout=self.config.zone_layout,
-            pad_zones_to=self.executor.zone_chunk or 1,
-            pad_edges_to=64,
-        )
-        tail_counts = self.executor.run_layout(layout)
-        self.last_tail_layout = layout.summary()
+        with self.obs.tracer.span("stream.tail_mine", edges=cut,
+                                  final=final) as sp:
+            # rebase to the tail start: int32-safe, shift-invariant
+            tail = TemporalGraph(
+                u=self._u[:cut], v=self._v[:cut],
+                t=(self._t[:cut] - self._t[0]).astype(np.int32),
+                n_nodes=int(max(self._u[:cut].max(initial=-1),
+                                self._v[:cut].max(initial=-1)) + 1),
+            )
+            plan = tzp.plan_zones(
+                tail, delta=self.delta, l_max=self.l_max,
+                omega=self.omega, e_cap=self.e_cap,
+            )
+            layout = tzp.build_zone_layout(
+                tail, plan, layout=self.config.zone_layout,
+                pad_zones_to=self.executor.zone_chunk or 1,
+                pad_edges_to=64,
+            )
+            sp.set(n_zones=plan.n_zones)
+            tail_counts = self.executor.run_layout(layout)
+            self.last_tail_layout = layout.summary()
         return (transitions.device_counts_to_dict(tail_counts),
                 plan.n_zones, layout.e_cap)

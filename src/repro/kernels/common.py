@@ -24,7 +24,7 @@ import os
 
 import jax
 
-__all__ = ["INTERPRET_ENV", "resolve_interpret"]
+__all__ = ["INTERPRET_ENV", "note_trace", "resolve_interpret"]
 
 INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 
@@ -46,3 +46,20 @@ def resolve_interpret(interpret: bool | None = None) -> bool:
             f"{INTERPRET_ENV}={raw!r} is not a recognized mode; use one of "
             f"{_TRUE + _FALSE} or 'auto'")
     return jax.default_backend() == "cpu"
+
+
+def note_trace(kernel: str) -> None:
+    """Count one *trace* of a kernel wrapper in the process-global metrics.
+
+    Kernel wrappers run at jax trace time, inside ``jit`` — once per new
+    shape, not once per device launch — so the counter is named
+    ``repro_kernel_traces_total``: it measures how often XLA had to rebuild
+    a kernel, which is exactly the jit-cache-health signal (launch counts
+    live in ``repro_mining_launches_total``, emitted host-side by the
+    executor).  The import is lazy and the global default is a no-op
+    bundle, so the disabled-mode cost is one function call per trace.
+    """
+    from repro.obs import global_obs
+
+    global_obs().metrics.counter("repro_kernel_traces_total",
+                                 kernel=kernel).inc()

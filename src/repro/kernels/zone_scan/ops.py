@@ -16,6 +16,7 @@ import jax
 from repro.core.backends import FUSED_BLK_DEFAULT
 from repro.core.backends import PALLAS_BLOCK_DEFAULTS as DEFAULT_BLOCKS
 from repro.core.expansion import ZoneResult
+from repro.kernels.common import note_trace
 
 from .zone_scan import fused_zone_scan_flat, zone_scan_pallas
 
@@ -28,6 +29,8 @@ def scan_zone(
     c_blk: int = DEFAULT_BLOCKS["c_blk"], e_blk: int = DEFAULT_BLOCKS["e_blk"],
     interpret: bool | None = None,
 ) -> ZoneResult:
+    # runs at trace time (inside jit): counts kernel re-traces, not launches
+    note_trace("zone_scan")
     code, length = zone_scan_pallas(
         u, v, t, valid, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
         interpret=interpret,
@@ -59,6 +62,7 @@ def scan_flat(
     raw ``(code int32[S, L], length int32[S])`` per candidate slot rather
     than a :class:`ZoneResult` — the flat stream has no zone axis.
     """
+    note_trace("zone_scan_flat")
     return fused_zone_scan_flat(
         u, v, t, valid, zone_id, hi, delta=delta, l_max=l_max, blk=blk,
         interpret=interpret,

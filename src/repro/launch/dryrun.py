@@ -23,7 +23,6 @@ import argparse          # noqa: E402
 import json              # noqa: E402
 import subprocess        # noqa: E402
 import sys               # noqa: E402
-import time              # noqa: E402
 import traceback         # noqa: E402
 
 import jax               # noqa: E402
@@ -31,6 +30,7 @@ import jax               # noqa: E402
 from repro.configs import all_cells, get_arch        # noqa: E402
 from repro.launch import analysis                    # noqa: E402
 from repro.launch.mesh import make_production_mesh   # noqa: E402
+from repro.obs.timing import Stopwatch               # noqa: E402
 
 DEFAULT_OUT = os.path.join(
     os.path.dirname(os.path.dirname(os.path.dirname(
@@ -87,9 +87,9 @@ def run_cell(arch_name: str, shape_name: str, mesh_kind: str,
     arch = _apply_overrides(get_arch(arch_name), overrides)
     wl = arch.workload(shape_name, mesh)
 
-    t0 = time.perf_counter()
-    compiled = _compile_workload(wl)
-    t_compile = time.perf_counter() - t0
+    with Stopwatch() as sw:
+        compiled = _compile_workload(wl)
+    t_compile = sw.seconds
 
     mem = compiled.memory_analysis()
     full = _measure(compiled)
@@ -203,14 +203,14 @@ def orchestrate(out_dir: str, meshes=("single", "multi"), force=False,
           f"({len(cells) - len(todo)} cached)")
     failures = []
     for i, (a, s, m) in enumerate(todo):
-        t0 = time.perf_counter()
-        proc = subprocess.run(
-            [sys.executable, "-m", "repro.launch.dryrun",
-             "--arch", a, "--shape", s, "--mesh", m, "--out", out_dir],
-            capture_output=True, text=True, timeout=timeout,
-            env=dict(os.environ),
-        )
-        dt = time.perf_counter() - t0
+        with Stopwatch() as sw:
+            proc = subprocess.run(
+                [sys.executable, "-m", "repro.launch.dryrun",
+                 "--arch", a, "--shape", s, "--mesh", m, "--out", out_dir],
+                capture_output=True, text=True, timeout=timeout,
+                env=dict(os.environ),
+            )
+        dt = sw.seconds
         if proc.returncode != 0:
             failures.append((a, s, m))
             err = (proc.stderr or "")[-1500:]

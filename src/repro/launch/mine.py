@@ -31,9 +31,11 @@ import argparse
 import json
 import time
 
+import repro.obs as obs_mod
 from repro.core import MiningConfig, PTMTEngine
 from repro.core.streaming import replay_stream
 from repro.data import synthetic_graphs
+from repro.obs.timing import latency_summary
 
 
 def _print_result(res, dt: float, label: str) -> None:
@@ -92,12 +94,14 @@ def _run_stream(args, engine: PTMTEngine, graph):
     chunk = args.chunk_edges
     latencies, dt = replay_stream(miner, graph, chunk)
     res = miner.snapshot(final=True)
+    digest = latency_summary(latencies)
     stream_stats = {
         "chunk_edges": chunk,
-        "chunks": len(latencies),
-        "mean_chunk_ms": (1e3 * sum(latencies) / len(latencies)
-                          if latencies else 0.0),
-        "max_chunk_ms": 1e3 * max(latencies) if latencies else 0.0,
+        "chunks": digest["count"],
+        "mean_chunk_ms": digest["mean_ms"],
+        "max_chunk_ms": digest["max_ms"],
+        "p50_chunk_ms": digest["p50_ms"],
+        "p99_chunk_ms": digest["p99_ms"],
         "zones_finalized": miner.n_zones_finalized,
         "edges_retired": miner.n_edges_retired,
         "buffered_edges": miner.buffered_edges,
@@ -132,10 +136,12 @@ def main():
     ap.add_argument("--out-json", default=None,
                     help="write the full run summary (same schema for "
                          "batch and stream modes)")
+    obs_mod.add_cli_args(ap)
     args = ap.parse_args()
 
     config = MiningConfig.from_cli_args(args)
-    engine = PTMTEngine(config)
+    obs = obs_mod.from_cli_args(args)
+    engine = PTMTEngine(config, obs=obs)
     graph = synthetic_graphs.make(args.dataset, seed=args.seed)
     print(f"{args.dataset}: {graph.n_edges} edges, {graph.n_nodes} nodes, "
           f"span {graph.time_span}s")
@@ -167,6 +173,8 @@ def main():
                                stream_stats),
                       f, indent=1, sort_keys=True)
         print(f"summary written to {args.out_json}")
+
+    obs_mod.write_cli_outputs(obs, args)
 
 
 if __name__ == "__main__":

@@ -21,7 +21,10 @@ class SessionManager:
         ``engine=`` (one shared :class:`repro.core.engine.PTMTEngine`, the
         multi-tenant deployment shape: each session's miner shares the
         engine's warm executor) or ``config=`` plus serving knobs like
-        ``ingest_batch``; per-tenant ``create(**params)`` overrides win."""
+        ``ingest_batch``; per-tenant ``create(**params)`` overrides win.
+        ``obs=`` (an :class:`repro.obs.Observability` bundle) is a valid
+        default too — every tenant session then emits into one registry,
+        with per-tenant series split by the ``tenant`` label."""
         if max_sessions < 1:
             raise ValueError("max_sessions must be >= 1")
         self.max_sessions = int(max_sessions)

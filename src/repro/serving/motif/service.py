@@ -11,9 +11,12 @@ can use to correlate answers across queries — plus the server-side latency.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 
 import numpy as np
+
+from repro.obs import get_obs
 
 from .manager import SessionManager
 from .query import QueryEngine
@@ -41,6 +44,10 @@ class QueryResponse:
     epoch: int                   # snapshot epoch the answer reflects
     latency_s: float
     payload: object
+    #: True when this was the first query of its (session, op) pair —
+    #: ``latency_s`` then includes one-time costs (JAX trace + compile,
+    #: lazy index builds) that steady-state percentiles must exclude.
+    first_call: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,11 +67,22 @@ class MotifService:
     shared engine (one resolved backend, one warm compile cache).
     """
 
-    def __init__(self, manager: SessionManager | None = None,
-                 **manager_kwargs):
+    def __init__(self, manager: SessionManager | None = None, *,
+                 obs=None, **manager_kwargs):
         if manager is not None and manager_kwargs:
             raise ValueError("pass either a manager or manager kwargs")
+        # the bundle is both the service's own sink (query latency
+        # histograms) and the default for every tenant session (it rides
+        # the manager's session_defaults into MotifSession(obs=...))
+        self.obs = get_obs(obs)
+        if manager is None and self.obs.enabled:
+            manager_kwargs.setdefault("obs", self.obs)
         self.manager = manager or SessionManager(**manager_kwargs)
+        # (session, op) pairs that have answered at least one query — the
+        # first query pays one-time compile/index cost and is reported as
+        # first_call instead of polluting steady-state latency
+        self._warm: set[tuple[str, str]] = set()
+        self._warm_lock = threading.Lock()
 
     # -- tenant lifecycle ---------------------------------------------------
 
@@ -72,7 +90,11 @@ class MotifService:
         return self.manager.create(name, **params)
 
     def drop_session(self, name: str):
-        return self.manager.drop(name)
+        session = self.manager.drop(name)
+        # a re-created tenant starts cold again: forget its warm pairs
+        with self._warm_lock:
+            self._warm = {k for k in self._warm if k[0] != name}
+        return session
 
     def sessions(self) -> list[str]:
         return self.manager.names()
@@ -115,16 +137,31 @@ class MotifService:
                 f"unknown op {request.op!r}; expected one of {QUERY_OPS}"
             )
         sess = self.manager.get(request.session)
-        t0 = time.perf_counter()
-        # engine() holds the session lock for the cache lookup (and, on the
-        # first query of an epoch, the snapshot mine — see MotifSession.
-        # engine); dispatch then runs lock-free against the immutable
-        # snapshot, so query evaluation itself never blocks ingest
-        engine = sess.engine()
-        payload = self._dispatch(engine, request)
+        with self._warm_lock:
+            first_call = (request.session, request.op) not in self._warm
+            if first_call:
+                self._warm.add((request.session, request.op))
+        with self.obs.tracer.span("serve.query", tenant=request.session,
+                                  op=request.op):
+            t0 = time.perf_counter()
+            # engine() holds the session lock for the cache lookup (and, on
+            # the first query of an epoch, the snapshot mine — see
+            # MotifSession.engine); dispatch then runs lock-free against
+            # the immutable snapshot, so query evaluation itself never
+            # blocks ingest
+            engine = sess.engine()
+            payload = self._dispatch(engine, request)
+            latency_s = time.perf_counter() - t0
+        # first calls carry one-time trace/compile/index cost; route them
+        # to their own histogram so the steady-state series stays honest
+        name = ("repro_serving_query_first_call_ms" if first_call
+                else "repro_serving_query_latency_ms")
+        self.obs.metrics.histogram(
+            name, tenant=request.session, op=request.op,
+        ).observe(latency_s * 1e3)
         return QueryResponse(
             session=request.session, op=request.op, epoch=engine.epoch,
-            latency_s=time.perf_counter() - t0, payload=payload,
+            latency_s=latency_s, payload=payload, first_call=first_call,
         )
 
     @staticmethod

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.config import MiningConfig
 from repro.core.streaming import StreamingMiner
+from repro.obs import get_obs
 
 from .cache import EpochCache
 from .query import QueryEngine
@@ -68,6 +69,7 @@ class MotifSession:
         memory_budget_mb: float | None = None,
         ingest_batch: int = 4096,
         cache_capacity: int = 2,
+        obs=None,
     ):
         if ingest_batch < 1:
             raise ValueError("ingest_batch must be >= 1")
@@ -89,6 +91,20 @@ class MotifSession:
         # per-epoch QueryEngine — mining_engine is the PTMTEngine this
         # session was built from (None on the config/kwargs paths)
         self.mining_engine = engine
+        # obs resolution: explicit bundle > shared engine's > miner's own
+        # (NULL unless the miner was given one).  When the session's bundle
+        # is live and the miner's is not, adopt it on the miner too so
+        # stream.* spans and gauges land in the same export.
+        if obs is not None:
+            self.obs = get_obs(obs)
+        elif engine is not None:
+            self.obs = engine.obs
+        else:
+            self.obs = self.miner.obs
+        if self.obs.enabled and not self.miner.obs.enabled:
+            self.miner.obs = self.obs
+        # tag the miner's metric series with the tenant name
+        self.miner.obs_label = name
         self.config = self.miner.config
         self.cache = EpochCache(cache_capacity)
         self.lock = threading.RLock()
@@ -135,6 +151,7 @@ class MotifSession:
             if self._pending >= self.ingest_batch:
                 self._flush_locked()
                 return True
+            self._note_pending()
             return False
 
     def flush(self) -> int:
@@ -154,7 +171,13 @@ class MotifSession:
             self._pend_u, self._pend_v, self._pend_t = [], [], []
             self._pending = 0
             self.edges_discarded += n
+            self._note_pending()
             return n
+
+    def _note_pending(self) -> None:
+        if self.obs.enabled:
+            self.obs.metrics.gauge("repro_serving_pending_edges",
+                                   tenant=self.name).set(self._pending)
 
     def _flush_locked(self) -> int:
         n = self._pending
@@ -168,10 +191,12 @@ class MotifSession:
         # rejected window (e.g. an edge older than the stream head) the
         # buffer is kept intact for the caller to inspect or drop — edges
         # are never silently lost
-        self.miner.ingest(u[order], v[order], t[order])
+        with self.obs.tracer.span("serve.flush", tenant=self.name, edges=n):
+            self.miner.ingest(u[order], v[order], t[order])
         self._pend_u, self._pend_v, self._pend_t = [], [], []
         self._pending = 0
         self.flushes += 1
+        self._note_pending()
         return n
 
     # -- query path ---------------------------------------------------------
@@ -191,9 +216,18 @@ class MotifSession:
             epoch = self.miner.epoch
             engine = self.cache.get(epoch)
             if engine is None:
-                engine = QueryEngine(self.miner.snapshot(), epoch=epoch)
+                with self.obs.tracer.span("serve.snapshot",
+                                          tenant=self.name, epoch=epoch):
+                    engine = QueryEngine(self.miner.snapshot(), epoch=epoch)
                 self.snapshots_mined += 1
                 self.cache.put(epoch, engine)
+                self.obs.metrics.counter(
+                    "repro_serving_snapshot_cache_misses_total",
+                    tenant=self.name).inc()
+            else:
+                self.obs.metrics.counter(
+                    "repro_serving_snapshot_cache_hits_total",
+                    tenant=self.name).inc()
             return engine
 
     # -- reporting ----------------------------------------------------------

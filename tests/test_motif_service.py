@@ -280,15 +280,26 @@ def test_epoch_cache_lru_and_stats():
 def test_concurrent_tenants_threaded():
     """Ingest threads and query threads race across two sessions; the final
     served state must still equal batch discover per tenant.  The numpy
-    oracle backend keeps this pure host-side."""
+    oracle backend keeps this pure host-side.
+
+    The service runs with a live :class:`repro.obs.Observability` bundle
+    and dedicated hammer threads pound the same ``MetricsRegistry`` the
+    whole time — every increment must land exactly (per-instrument locks),
+    the serving histograms must account for every query the drivers
+    issued, and both export formats must render after the storm.
+    """
+    import repro.obs as obs_mod
+
     graphs = {"a": random_graph(21, 400, 8, 1_500),
               "b": random_graph(22, 400, 8, 1_500)}
-    service = make_service(backend="numpy", ingest_batch=64)
+    obs = obs_mod.enabled()
+    service = make_service(backend="numpy", ingest_batch=64, obs=obs)
     for name in graphs:
         service.create_session(name)
 
     errors: list[Exception] = []
     done = threading.Event()
+    n_queries: dict[str, int] = {}
 
     def ingester(name, g):
         try:
@@ -299,6 +310,7 @@ def test_concurrent_tenants_threaded():
             errors.append(exc)
 
     def querier(name):
+        served = 0
         try:
             while not done.is_set():
                 r = service.query(
@@ -307,12 +319,30 @@ def test_concurrent_tenants_threaded():
                 r = service.query(
                     QueryRequest(session=name, op="prefix_count", code="01"))
                 assert r.payload >= 0
+                served += 2
+        except Exception as exc:                 # pragma: no cover
+            errors.append(exc)
+        n_queries[name] = served
+
+    HAMMER_ITERS, HAMMER_THREADS = 4_000, 4
+
+    def hammer(worker):
+        try:
+            c = obs.metrics.counter("test_hammer_total")
+            h = obs.metrics.histogram("test_hammer_ms")
+            g_ = obs.metrics.gauge("test_hammer_gauge", worker=str(worker))
+            for k in range(HAMMER_ITERS):
+                c.inc()
+                h.observe(float(k % 7))
+                g_.set(k)
         except Exception as exc:                 # pragma: no cover
             errors.append(exc)
 
     threads = [threading.Thread(target=ingester, args=(n, g))
                for n, g in graphs.items()]
     threads += [threading.Thread(target=querier, args=(n,)) for n in graphs]
+    threads += [threading.Thread(target=hammer, args=(i,))
+                for i in range(HAMMER_THREADS)]
     for t in threads:
         t.start()
     for t in threads[:2]:
@@ -321,6 +351,24 @@ def test_concurrent_tenants_threaded():
     for t in threads[2:]:
         t.join()
     assert not errors, errors
+
+    # every hammer increment landed exactly once
+    total = HAMMER_ITERS * HAMMER_THREADS
+    assert obs.metrics.counter("test_hammer_total").value == total
+    assert obs.metrics.find("test_hammer_ms").count == total
+    # the query histograms account for every query issued (first-call +
+    # steady-state split must not lose observations)
+    recorded = sum(
+        inst.count for inst in obs.metrics.instruments()
+        if inst.name in ("repro_serving_query_latency_ms",
+                         "repro_serving_query_first_call_ms"))
+    assert recorded == sum(n_queries.values())
+    # exports render after concurrent mutation
+    snap = obs.metrics.snapshot()
+    assert any(c["name"] == "test_hammer_total" for c in snap["counters"])
+    prom = obs.metrics.to_prometheus()
+    assert "# TYPE test_hammer_total counter" in prom
+    assert "# TYPE repro_serving_query_latency_ms histogram" in prom
 
     for name, g in graphs.items():
         service.flush(name)
