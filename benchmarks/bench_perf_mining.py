@@ -195,7 +195,7 @@ def _zone_layout_section(smoke: bool):
     for kind, lay in layouts.items():
         ex = _Ex(delta=DELTA, l_max=L_MAX)
         run = lambda lay=lay, ex=ex: transitions.device_counts_to_dict(
-            ex.run_layout(lay))
+            ex.run_layout(lay).counts)
         counts, secs = timed(run, warmup=1, repeats=1 if smoke else 2)
         counts_seen[kind] = counts
         modes[kind] = {
@@ -257,8 +257,8 @@ def _fused_section(smoke: bool):
     to host.  Counts must be identical.  Launch accounting comes from the
     executor's metrics registry (``repro_mining_launches_total{path=...}``
     counter deltas per mine plus the ``repro_mining_fused_*`` gauges) —
-    the same surface a scrape sees — and the legacy ``last_run_stats``
-    view is read once only to assert the two surfaces agree.  CI asserts
+    the same surface a scrape sees — and one ``RunOutcome.stats`` dict is
+    read to assert the two surfaces agree.  CI asserts
     the fused path reports exactly one launch per mine and is no slower
     than per-bucket.
     """
@@ -279,7 +279,7 @@ def _fused_section(smoke: bool):
                                              path=path)
         c0 = launch_counter.value
         run = lambda fused=fused: transitions.device_counts_to_dict(
-            ex.run_layout(lay, fused=fused))
+            ex.run_layout(lay, fused=fused).counts)
         counts, secs = timed(run, warmup=1, repeats=repeats)
         counts_seen[name] = counts
         modes[name] = {
@@ -294,9 +294,9 @@ def _fused_section(smoke: bool):
     gauge = lambda n: int(obs.metrics.gauge(n).value)
     spills = obs.metrics.find("repro_mining_spill_retries_total",
                               path="fused")
-    # the registry mirrors last_run_stats, never redefines it — assert the
-    # two surfaces agree on the fused geometry
-    lrs = ex.last_run_stats
+    # the registry mirrors the RunOutcome stats, never redefines them —
+    # assert the two surfaces agree on the fused geometry
+    lrs = ex.run_layout(lay, fused=True).stats
     assert (lrs["path"], lrs["launches"]) == ("fused", 1)
     assert lrs["merge_cap"] == gauge("repro_mining_fused_merge_cap")
     assert lrs["n_slots"] == gauge("repro_mining_fused_slots")
@@ -363,7 +363,7 @@ def _observability_section(smoke: bool):
     # disabled-mode fused run: the default NULL_OBS executor
     ex_off = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas")
     run_off = lambda: transitions.device_counts_to_dict(
-        ex_off.run_layout(lay, fused=True))
+        ex_off.run_layout(lay, fused=True).counts)
     counts_off, secs_off = timed(run_off, warmup=1, repeats=2)
 
     # enabled run on the same workload: span census + snapshot sample
@@ -371,7 +371,7 @@ def _observability_section(smoke: bool):
     ex_on = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas",
                            obs=obs)
     run_on = lambda: transitions.device_counts_to_dict(
-        ex_on.run_layout(lay, fused=True))
+        ex_on.run_layout(lay, fused=True).counts)
     counts_on, secs_on = timed(run_on, warmup=1, repeats=2)
     assert counts_on == counts_off, "observability changed mining results"
     n_runs_on = 3  # warmup + repeats

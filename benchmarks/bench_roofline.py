@@ -132,13 +132,13 @@ def _ragged_sweep_section(smoke: bool):
                              gap_span=30_000, seed=13)
         plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2)
         lay = tzp.build_zone_layout(g, plan, layout="bucketed")
-        counts = ex.run_layout(lay, fused=True)       # warmup / compile
+        outcome = ex.run_layout(lay, fused=True)      # warmup / compile
         best = float("inf")
         for _ in range(2 if smoke else 3):
             t0 = time.perf_counter()
-            counts = ex.run_layout(lay, fused=True)
+            outcome = ex.run_layout(lay, fused=True)
             best = min(best, time.perf_counter() - t0)
-        stats = dict(ex.last_run_stats)
+        stats = dict(outcome.stats)
         assert stats["launches"] == 1, stats
         fl = tzp.concat_layout(lay, blk=ex.fused_blk,
                                pad_slots_to=stats["fold_chunk"])
@@ -155,7 +155,8 @@ def _ragged_sweep_section(smoke: bool):
             "achieved_bytes_per_s": achieved,
             "fraction_of_peak": achieved / peak if peak else 0.0,
             "launches": stats["launches"],
-            "motif_types": len(transitions.device_counts_to_dict(counts)),
+            "motif_types": len(
+                transitions.device_counts_to_dict(outcome.counts)),
         }
         points.append(point)
         rows.append(csv_row(

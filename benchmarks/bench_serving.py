@@ -8,7 +8,11 @@ workload and reports:
   * query p50/p99 latency and the snapshot-cache hit rate (epoch-keyed, so
     every query between two frontier advances after the first is a hit);
   * a correctness audit: each tenant's served counts must equal batch
-    ``discover`` on its closed prefix.
+    ``discover`` on its closed prefix;
+  * a **config-lattice co-mine** comparison: N tenant configs (shared
+    graph, differing ``delta``/``l_max``) mined through ONE shared Phase-1
+    sweep (``engine.discover_many``) vs N independent ``discover`` calls —
+    wall-clock, Phase-1 launch counters, and a byte-equivalence flag.
 
 The service runs with a live :class:`repro.obs.Observability` bundle and
 the query-latency row is derived from the registry's per-(tenant, op)
@@ -50,7 +54,74 @@ def _make_stream(n, nodes=40, span_per_edge=8, seed=11):
     )
 
 
-def run(smoke: bool = False) -> list[str]:
+def _comine_section(smoke: bool):
+    """N-config co-mine vs N independent mines on one shared graph.
+
+    Warm both sides first (compile + plan caches), then time steady-state:
+    the co-mined side runs ONE dominating Phase-1 expansion and splits
+    member count tables in the fold, so its launch count is a single
+    sweep's while the independent side pays one full sweep per config.
+    Counts must match byte-for-byte — CI asserts the flag.
+    """
+    from repro.core.config import MiningConfig
+    from repro.core.engine import PTMTEngine
+
+    n_edges = 1_200 if smoke else 8_000
+    g = _make_stream(n_edges, seed=17)
+    base = MiningConfig(delta=DELTA, l_max=L_MAX, omega=OMEGA, backend="ref")
+    configs = [
+        base,
+        base.with_updates(delta=DELTA // 2, l_max=L_MAX - 1),
+        base.with_updates(delta=DELTA - 10, l_max=L_MAX),
+        base.with_updates(delta=DELTA, l_max=2),
+    ]
+
+    # independent baseline: one warm engine per tenant config
+    solo_engines = [PTMTEngine(c) for c in configs]
+    for e in solo_engines:
+        e.discover(g)                                   # warm caches
+    t0 = time.perf_counter()
+    solo = [e.discover(g) for e in solo_engines]
+    independent_s = time.perf_counter() - t0
+    independent_launches = sum(
+        r.layout["execution"]["launches"] for r in solo)
+
+    eng = PTMTEngine(base)
+    eng.discover_many(g, configs)                       # warm caches
+    t0 = time.perf_counter()
+    many = eng.discover_many(g, configs)
+    comine_s = time.perf_counter() - t0
+    comine_launches = many[0].layout["execution"]["launches"]
+
+    equal = all(r.counts == s.counts for r, s in zip(many, solo))
+    payload = {
+        "edges": g.n_edges,
+        "n_configs": len(configs),
+        "configs": [
+            {"delta": c.delta, "l_max": c.l_max, "omega": c.omega}
+            for c in configs
+        ],
+        "path": many[0].layout["execution"]["path"],
+        "independent_seconds": independent_s,
+        "comine_seconds": comine_s,
+        "independent_launches": independent_launches,
+        "comine_launches": comine_launches,
+        "speedup_comine_vs_independent": (
+            independent_s / comine_s if comine_s else 0.0),
+        "counts_equal": equal,
+    }
+    row = csv_row(
+        f"serving/comine_n{len(configs)}", comine_s,
+        f"independent_s={independent_s:.3f};"
+        f"speedup={payload['speedup_comine_vs_independent']:.2f}x;"
+        f"launches={comine_launches}_vs_{independent_launches};"
+        f"equal={'yes' if equal else 'NO'}",
+    )
+    assert equal, "co-mined counts diverged from independent discover"
+    return row, payload
+
+
+def _serving_section(smoke: bool):
     n_edges = 1_500 if smoke else 6_000
     tenants = 2 if smoke else 3
     chunk = 96 if smoke else 256
@@ -114,7 +185,37 @@ def run(smoke: bool = False) -> list[str]:
         ),
     ]
     assert exact, "served counts diverged from batch discover"
+    payload = {
+        "edges": g.n_edges,
+        "tenants": tenants,
+        "ingest_edges_per_s": report["ingest_edges_per_s"],
+        "query_p50_ms": query_p50_ms,
+        "query_p99_ms": query_p99_ms,
+        "queries": reg_n,
+        "first_calls": n_first,
+        "cache_hit_rate": report["cache_hit_rate"],
+        "snapshots_mined": report["snapshots_mined"],
+        "exact": exact,
+    }
+    return rows, payload
+
+
+def run(smoke: bool = False) -> list[str]:
+    rows, _ = run_json(smoke=smoke)
     return rows
+
+
+def run_json(smoke: bool = False):
+    """Rows + the structured payload ``--out-json`` lands in BENCH JSON."""
+    rows, workload = _serving_section(smoke)
+    comine_row, comine = _comine_section(smoke)
+    payload = {
+        "suite": "serving",
+        "smoke": smoke,
+        "workload": workload,
+        "comine": comine,
+    }
+    return rows + [comine_row], payload
 
 
 if __name__ == "__main__":

@@ -8,8 +8,10 @@ support it (a ``run(smoke=...)`` signature) at tiny sizes — the CI mode that
 catches suite-registry breakage without paying full benchmark cost.
 
 ``--out-json FILE`` additionally collects structured payloads from suites
-exposing ``run_json`` (currently the mining suite: edges/sec + peak-memory
-estimates) so ``BENCH_*.json`` perf history accumulates run over run.
+exposing ``run_json`` (mining: edges/sec + peak-memory estimates; roofline:
+ragged-sweep bandwidth; serving: multi-tenant latency + config-lattice
+co-mine comparison).  Payloads merge into an existing file by suite name,
+so ``BENCH_*.json`` accumulates across invocations instead of clobbering.
 """
 
 from __future__ import annotations
@@ -80,8 +82,18 @@ def main() -> None:
                   flush=True)
             traceback.print_exc(file=sys.stderr)
     if args.out_json:
+        # merge into an existing BENCH file so suites written by separate
+        # invocations (e.g. perf_mining then serving) accumulate instead
+        # of clobbering each other
+        try:
+            with open(args.out_json) as f:
+                existing = json.load(f)
+            suites = dict(existing.get("suites", {}))
+        except (FileNotFoundError, json.JSONDecodeError):
+            suites = {}
+        suites.update(payloads)
         with open(args.out_json, "w") as f:
-            json.dump({"argv": sys.argv[1:], "suites": payloads},
+            json.dump({"argv": sys.argv[1:], "suites": suites},
                       f, indent=1, sort_keys=True)
         print(f"json written to {args.out_json}", file=sys.stderr)
     if failures:

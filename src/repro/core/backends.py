@@ -60,6 +60,11 @@ class BackendSpec:
     mem_model: Callable[[int, int], int] | None = None
     default_merge_cap: int | None = None
     fused_loader: Callable[[], Callable] | None = None
+    #: Whether ``scan`` (and ``fused_scan``, if any) accept a ``with_ts``
+    #: keyword returning per-step absorption timestamps — the input the
+    #: executor's config-lattice co-mining fold needs to derive smaller
+    #: configs' counts from one dominating sweep.
+    supports_comine: bool = False
     _scan: Callable | None = dataclasses.field(
         default=None, repr=False, compare=False)
     _fused_scan: Callable | None = dataclasses.field(
@@ -111,6 +116,7 @@ def register_backend(
     mem_model: Callable[[int, int], int] | None = None,
     default_merge_cap: int | None = None,
     fused_loader: Callable[[], Callable] | None = None,
+    supports_comine: bool = False,
     overwrite: bool = False,
 ) -> BackendSpec:
     """Publish a zone-scan backend under ``name``.
@@ -129,7 +135,7 @@ def register_backend(
         default_zone_chunk=default_zone_chunk,
         max_recommended_e_cap=max_recommended_e_cap,
         mem_model=mem_model, default_merge_cap=default_merge_cap,
-        fused_loader=fused_loader,
+        fused_loader=fused_loader, supports_comine=supports_comine,
     )
     _REGISTRY[name] = spec
     return spec
@@ -208,6 +214,7 @@ register_backend(
     jittable=True, grade="reference",
     description="vectorized jnp lax.scan expansion (exact, any device)",
     mem_model=_ref_mem_model,
+    supports_comine=True,
 )
 
 register_backend(
@@ -217,6 +224,7 @@ register_backend(
     block_defaults=PALLAS_BLOCK_DEFAULTS,
     mem_model=_pallas_mem_model,
     fused_loader=_load_pallas_fused,
+    supports_comine=True,
 )
 
 register_backend(
@@ -226,4 +234,5 @@ register_backend(
     max_recommended_e_cap=4096,
     mem_model=_ref_mem_model,
     default_merge_cap=4096,
+    supports_comine=True,
 )

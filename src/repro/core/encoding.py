@@ -60,6 +60,26 @@ def empty_code(shape, l_max: int):
     return jnp.zeros((*shape, n_limbs(l_max)), dtype=jnp.int32)
 
 
+def truncate_codes(code, lengths):
+    """Truncate limb codes to their first ``lengths`` edges (vectorized).
+
+    The jnp analog of :func:`prefix_code_np` with a per-row level: keeps
+    the first ``2 * lengths[...]`` digits of ``code[..., L]`` and zeroes
+    the rest.  Because label assignment is first-occurrence over the edge
+    sequence, a truncated code equals the code of the prefix process — the
+    property the config-lattice co-mining fold relies on to split one
+    dominating sweep into per-config count tables.
+    """
+    limbs = code.shape[-1]
+    keep = 2 * lengths.astype(jnp.int32)
+    limb_iota = jnp.arange(limbs, dtype=jnp.int32)
+    n_keep = jnp.clip(keep[..., None] - limb_iota * DIGITS_PER_LIMB,
+                      0, DIGITS_PER_LIMB)
+    mask = jnp.bitwise_xor(
+        jnp.right_shift(_LIMB_MASK, DIGIT_BITS * n_keep), _LIMB_MASK)
+    return code & mask
+
+
 # ---------------------------------------------------------------------------
 # Host-side (numpy) helpers for reporting / tests.
 # ---------------------------------------------------------------------------

@@ -39,7 +39,7 @@ import numpy as np
 
 from repro.obs import get_obs
 
-from . import tzp
+from . import planner, tzp
 from .api import DiscoveryResult, counts_to_result
 from .config import MiningConfig
 from .executor import MiningExecutor
@@ -62,6 +62,8 @@ class EngineStats:
     exports and ``EngineStats`` always agree."""
 
     discover_calls: int = 0
+    discover_many_calls: int = 0    # co-mined multi-config discover calls
+    comined_configs: int = 0        # member configs served by shared sweeps
     sequential_calls: int = 0
     sharded_calls: int = 0
     stream_sessions: int = 0
@@ -117,6 +119,14 @@ class PTMTEngine:
         # bound.
         self._zone_plans: dict[tuple, tzp.ZonePlan] = {}
         self._zone_plan_cap = 64
+        # lattice-keyed executor cache: dominating MiningConfig -> warm
+        # MiningExecutor for that sweep shape.  discover_many over the
+        # same tenant mix reuses one executor (and its jit state) per
+        # lattice; the engine's own executor serves lattices whose
+        # dominating config IS the engine config.  LRU-bounded like the
+        # zone-plan cache.
+        self._lattice_executors: dict[MiningConfig, MiningExecutor] = {}
+        self._lattice_executor_cap = 16
 
     @property
     def backend(self) -> str:
@@ -154,16 +164,19 @@ class PTMTEngine:
 
     # -- batch discovery ----------------------------------------------------
 
-    def plan_zones(self, graph: TemporalGraph) -> tzp.ZonePlan:
+    def plan_zones(self, graph: TemporalGraph,
+                   config: MiningConfig | None = None) -> tzp.ZonePlan:
         """Zone plan for ``graph``, memoized by graph fingerprint.
 
         The cache key is ``(graph_fingerprint, delta, l_max, omega,
         e_cap)`` — exactly the inputs Algorithm 1 depends on — so repeated
         ``discover`` on the same stream skips host-side planning entirely.
         ``ZonePlan.to_json``/``from_json`` round-trip exactly, so a plan
-        can also be persisted and re-attached out of process.
+        can also be persisted and re-attached out of process.  ``config``
+        plans for a non-engine config (the co-mine path plans at a
+        lattice's dominating config) through the same cache.
         """
-        cfg = self.config
+        cfg = config or self.config
         key = (tzp.graph_fingerprint(graph), cfg.delta, cfg.l_max,
                cfg.omega, cfg.e_cap)
         plan = self._zone_plans.get(key)
@@ -183,10 +196,13 @@ class PTMTEngine:
         self.obs.metrics.counter("repro_mining_plan_cache_misses_total").inc()
         return plan
 
-    def _plan_and_layout(self, graph: TemporalGraph, n_shards: int = 1):
-        cfg = self.config
-        plan = self.plan_zones(graph)
-        pad_zones = (self.executor.zone_chunk or 1) * n_shards
+    def _plan_and_layout(self, graph: TemporalGraph, n_shards: int = 1, *,
+                         config: MiningConfig | None = None,
+                         executor: MiningExecutor | None = None):
+        cfg = config or self.config
+        executor = executor or self.executor
+        plan = self.plan_zones(graph, config=cfg)
+        pad_zones = (executor.zone_chunk or 1) * n_shards
         with self.obs.tracer.span("engine.layout", n_zones=plan.n_zones):
             layout = tzp.build_zone_layout(graph, plan,
                                            layout=cfg.zone_layout,
@@ -214,9 +230,8 @@ class PTMTEngine:
                                   n_edges=graph.n_edges) as sp:
             plan, layout = self._plan_and_layout(graph)
             keys = self.executor.layout_execution_keys(layout)
-            counts = self.executor.run_layout(
+            counts, run_stats = self.executor.run_layout(
                 layout, allow_overflow=self.config.allow_overflow)
-            run_stats = self.executor.last_run_stats
             sp.set(n_zones=plan.n_zones, path=run_stats.get("path"))
         if run_stats.get("path") == "fused":
             # one launch, one executable: the whole layout resolves to a
@@ -234,6 +249,83 @@ class PTMTEngine:
             l_max=self.config.l_max,
             layout={**layout.summary(), "execution": dict(run_stats)},
         )
+
+    # -- config-lattice co-mining --------------------------------------------
+
+    def _lattice_executor(self, dominating: MiningConfig) -> MiningExecutor:
+        """Warm executor for a lattice's dominating sweep config."""
+        if dominating == self.config:
+            return self.executor
+        ex = self._lattice_executors.get(dominating)
+        if ex is not None:
+            self._lattice_executors[dominating] = \
+                self._lattice_executors.pop(dominating)   # LRU bump
+            return ex
+        ex = MiningExecutor.from_config(dominating, obs=self.obs)
+        self._lattice_executors[dominating] = ex
+        while len(self._lattice_executors) > self._lattice_executor_cap:
+            self._lattice_executors.pop(next(iter(self._lattice_executors)))
+        return ex
+
+    def discover_many(self, graph: TemporalGraph,
+                      configs) -> list[DiscoveryResult]:
+        """Co-mine N tenant configs from shared dominating Phase-1 sweeps.
+
+        ``configs`` is a sequence of :class:`MiningConfig`s over the SAME
+        graph.  Configs differing only in ``delta``/``l_max``/``omega``
+        group into one lattice (:func:`repro.core.planner.
+        build_config_lattices`) and share ONE Phase-1 expansion planned at
+        the dominating ``(max delta, max l_max, max omega)``; each
+        member's count table is split out during the Phase-2 fold by
+        prefix-truncating candidates on per-edge absorption timestamps.
+        Results are byte-identical to per-config :meth:`discover` calls
+        (the differential tests assert it), returned in input order.
+        """
+        configs = list(configs)
+        if not configs:
+            return []
+        self.stats.discover_many_calls += 1
+        self.stats.comined_configs += len(configs)
+        results: list[DiscoveryResult | None] = [None] * len(configs)
+        lattices = planner.build_config_lattices(configs)
+        with self.obs.tracer.span("engine.discover_many",
+                                  n_edges=graph.n_edges,
+                                  n_configs=len(configs),
+                                  n_lattices=len(lattices)):
+            for lat in lattices:
+                self._discover_lattice(graph, lat, results)
+        return results
+
+    def _discover_lattice(self, graph: TemporalGraph,
+                          lat: planner.ConfigLattice, results: list) -> None:
+        """Mine one lattice's shared sweep and scatter member results."""
+        dom = lat.dominating
+        ex = self._lattice_executor(dom)
+        plan, layout = self._plan_and_layout(graph, config=dom, executor=ex)
+        params = lat.params
+        # compile-cache accounting: a multi-config fold compiles its own
+        # executable per (sweep key, member params) — distinct from the
+        # single-config executable the same layout would use
+        keys = tuple(k + (("multi",) + params,)
+                     for k in ex.layout_execution_keys(layout))
+        counts_tuple, run_stats = ex.run_layout_multi(
+            layout, params, allow_overflow=dom.allow_overflow)
+        if run_stats.get("path") == "fused-multi":
+            self._note_execution(keys[0], layout.n_zones)
+            self.stats.fused_runs += 1
+        else:
+            for key, bucket in zip(keys, layout.buckets):
+                self._note_execution(key, bucket.n_zones)
+        self.stats.launches += int(run_stats.get("launches", 0))
+        self._note_layout(layout)
+        layout_summary = {**layout.summary(), "execution": dict(run_stats)}
+        for member, idx, counts in zip(lat.members, lat.indices,
+                                       counts_tuple):
+            results[idx] = counts_to_result(
+                counts, n_zones=plan.n_zones, e_cap=layout.e_cap,
+                overflow=layout.overflow, delta=member.delta,
+                l_max=member.l_max, layout=layout_summary,
+            )
 
     def sequential(self, graph: TemporalGraph) -> DiscoveryResult:
         """TMC-analog baseline: one zone spanning the whole stream (no TZP).

@@ -56,6 +56,7 @@ from __future__ import annotations
 
 import functools
 import warnings
+from typing import NamedTuple
 
 import numpy as np
 
@@ -64,12 +65,31 @@ import jax.numpy as jnp
 
 from repro.obs import get_obs
 
-from . import aggregation, backends, encoding, planner
+from . import aggregation, backends, encoding, expansion, planner
 from .aggregation import CodeCounts
 from .tzp import (ZoneBatch, ZoneBatchLayout, concat_layout,
                   pad_zone_arrays)
 
 AGG_MODES = ("auto", "legacy", "hierarchical", "pipelined")
+
+
+class RunOutcome(NamedTuple):
+    """A layout run's result plus the stats of the dispatch that made it.
+
+    ``stats`` travels with the counts instead of being read back off the
+    executor, so concurrent runs through one shared executor can no longer
+    misattribute each other's ``path``/``launches``/``spill_retries``.
+    """
+
+    counts: CodeCounts
+    stats: dict
+
+
+class MultiRunOutcome(NamedTuple):
+    """A co-mined layout run: one count table per lattice member config."""
+
+    counts: tuple          # tuple[CodeCounts, ...], aligned with params
+    stats: dict
 
 #: Fused single-launch dispatch policy for ``run_layout``: "auto" fuses
 #: whenever the backend publishes a bucket-native flat kernel, "on"
@@ -308,6 +328,131 @@ def _merge_chunk_jit(carry, spilled, codes, lengths, signs, *, merge_cap):
     return merged, spilled + spill
 
 
+# ---------------------------------------------------------------------------
+# Config-lattice co-mining: derive every member config's Phase-2 tables from
+# ONE dominating Phase-1 sweep (see planner.ConfigLattice).
+# ---------------------------------------------------------------------------
+
+
+def _derive_member(code, length, ts, *, d_i, l_i, delta, l_max):
+    """A member config's (code, length) view of dominating sweep output.
+
+    The dominating member is the sweep itself; every smaller ``(delta,
+    l_max)`` is the timestamp-gap prefix truncation
+    (:func:`repro.core.expansion.derive_lengths` +
+    :func:`repro.core.encoding.truncate_codes`) — lossless because zone
+    streams are time-sorted, so prefix processes of the dominating sweep
+    are exactly what the smaller config would have mined.
+    """
+    if (d_i, l_i) == (delta, l_max):
+        return code, length
+    len_i = expansion.derive_lengths(length, ts, delta=d_i, l_max=l_i)
+    return encoding.truncate_codes(code, len_i), len_i
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("delta", "l_max", "scan", "zone_chunk", "params",
+                     "merge_caps"),
+)
+def _mine_multi_jit(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk,
+                    params, merge_caps):
+    """Jitted multi-config hierarchical fold over a [Z, E] zone batch.
+
+    ONE ``with_ts`` dominating scan per chunk; each member of ``params``
+    (a tuple of ``(delta_i, l_max_i)``) folds its derived candidate view
+    through its own bounded merge carry.  Returns a tuple of
+    ``(CodeCounts, spilled)`` pairs aligned with ``params``.
+    """
+    z = u.shape[0]
+    zc = zone_chunk if (zone_chunk and zone_chunk < z) else z
+    nchunk = _n_chunks(z, zc)
+    limbs = encoding.n_limbs(l_max)
+    reshape = lambda x: x.reshape(nchunk, zc, *x.shape[1:])
+    xs = (reshape(u), reshape(v), reshape(t), reshape(valid),
+          signs.reshape(nchunk, zc))
+
+    def body(carry, chunk):
+        cu, cv, ct, cvalid, csigns = chunk
+        res = scan(cu, cv, ct, cvalid, delta=delta, l_max=l_max,
+                   with_ts=True)
+        new_carry = []
+        for (d_i, l_i), (counts, spilled), cap in zip(params, carry,
+                                                      merge_caps):
+            code_i, len_i = _derive_member(
+                res.code, res.length, res.ts,
+                d_i=d_i, l_i=l_i, delta=delta, l_max=l_max)
+            part = aggregation.aggregate_zones(code_i, len_i, csigns)
+            merged, spill = aggregation.merge_bounded(counts, part, cap=cap)
+            new_carry.append((merged, spilled + spill))
+        return tuple(new_carry), None
+
+    init = tuple(
+        (aggregation.empty_counts(cap, limbs), jnp.int32(0))
+        for cap in merge_caps)
+    out, _ = jax.lax.scan(body, init, xs)
+    return out
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("delta", "l_max", "scan", "blk", "fold_chunk",
+                     "params", "merge_caps"),
+)
+def _mine_fused_multi_jit(u, v, t, valid, zone_id, sign, hi, *, delta, l_max,
+                          scan, blk, fold_chunk, params, merge_caps):
+    """Jitted fused co-mine: ONE flat kernel launch, N on-device folds.
+
+    The single-launch analog of :func:`_mine_multi_jit`: the dominating
+    sweep runs once over the concatenated layout (with per-step absorption
+    timestamps), then every member config's derived candidate view streams
+    through its own ``count_codes`` + ``merge_bounded`` fold inside the
+    same executable.
+    """
+    code, length, ts = scan(u, v, t, valid, zone_id, hi,
+                            delta=delta, l_max=l_max, blk=blk, with_ts=True)
+    s, limbs = code.shape
+    nchunk = s // fold_chunk
+    xs = (code.reshape(nchunk, fold_chunk, limbs),
+          length.reshape(nchunk, fold_chunk),
+          ts.reshape(nchunk, fold_chunk, ts.shape[-1]),
+          sign.reshape(nchunk, fold_chunk))
+
+    def body(carry, chunk):
+        c_code, c_len, c_ts, c_sign = chunk
+        new_carry = []
+        for (d_i, l_i), (counts, spilled), cap in zip(params, carry,
+                                                      merge_caps):
+            code_i, len_i = _derive_member(
+                c_code, c_len, c_ts,
+                d_i=d_i, l_i=l_i, delta=delta, l_max=l_max)
+            w = (len_i > 0).astype(jnp.int32) * c_sign
+            codes_m = jnp.where(w[:, None] != 0, code_i, 0)
+            part = aggregation.count_codes(codes_m, w)
+            merged, spill = aggregation.merge_bounded(counts, part, cap=cap)
+            new_carry.append((merged, spilled + spill))
+        return tuple(new_carry), None
+
+    init = tuple(
+        (aggregation.empty_counts(cap, limbs), jnp.int32(0))
+        for cap in merge_caps)
+    out, _ = jax.lax.scan(body, init, xs)
+    return out
+
+
+@functools.partial(
+    jax.jit, static_argnames=("d_i", "l_i", "delta", "l_max", "merge_cap")
+)
+def _derive_merge_chunk_jit(carry, spilled, codes, lengths, ts, signs, *,
+                            d_i, l_i, delta, l_max, merge_cap):
+    """One member config's bounded merge of a host-scanned chunk."""
+    code_i, len_i = _derive_member(codes, lengths, ts, d_i=d_i, l_i=l_i,
+                                   delta=delta, l_max=l_max)
+    part = aggregation.aggregate_zones(code_i, len_i, signs)
+    merged, spill = aggregation.merge_bounded(carry, part, cap=merge_cap)
+    return merged, spilled + spill
+
+
 class MiningExecutor:
     """Chunked scan+aggregate engine over padded zone batches.
 
@@ -332,11 +477,15 @@ class MiningExecutor:
         per-bucket path.  A per-call ``run_layout(fused=...)`` override
         beats the policy.
 
-    After every :meth:`run_layout`/:meth:`run_fused`, ``last_run_stats``
-    describes the dispatch that produced the result: ``path``
-    ("fused"/"per-bucket"), ``launches`` (scan dispatches in the final
-    successful attempt — 1 for fused, one per bucket otherwise) and
-    ``spill_retries`` (merge-cap doublings, each re-running the launch).
+    :meth:`run_layout`/:meth:`run_fused` return a :class:`RunOutcome`
+    whose ``stats`` describes the dispatch that produced the counts:
+    ``path`` ("fused"/"per-bucket"/their ``-multi`` co-mine variants),
+    ``launches`` (scan dispatches in the final successful attempt — 1 for
+    fused, one per bucket otherwise) and ``spill_retries`` (merge-cap
+    doublings, each re-running the launch).  ``last_run_stats`` remains as
+    a deprecated alias of the most recent run's stats; it is shared
+    mutable state and misattributes under concurrent runs — use the
+    returned ``RunOutcome.stats``.
     """
 
     def __init__(
@@ -377,7 +526,7 @@ class MiningExecutor:
         self.memory_budget_mb = memory_budget_mb
         self.fused = fused
         self.fused_blk = backends.FUSED_BLK_DEFAULT
-        self.last_run_stats: dict = {}
+        self._last_run_stats: dict = {}
         self._plan_cache: dict[tuple, object] = {}
         # observability bundle: NULL_OBS by default (shared no-op
         # singletons), so the hot paths below emit unconditionally
@@ -403,6 +552,23 @@ class MiningExecutor:
     @property
     def backend(self) -> str:
         return self.spec.name
+
+    @property
+    def last_run_stats(self) -> dict:
+        """Deprecated: the most recent layout run's stats (racy).
+
+        Shared mutable state — two threads running through one executor
+        can interleave and read each other's stats.  Use the
+        :class:`RunOutcome`/:class:`MultiRunOutcome` returned by
+        :meth:`run_layout`/:meth:`run_fused` instead.
+        """
+        warnings.warn(
+            "MiningExecutor.last_run_stats is deprecated and misattributes "
+            "under concurrent runs; use the stats field of the RunOutcome "
+            "returned by run_layout()/run_fused()",
+            DeprecationWarning, stacklevel=2,
+        )
+        return self._last_run_stats
 
     def execution_key(self, z: int, e: int) -> tuple:
         """The compile-cache key a ``[z, e]`` zone batch resolves to.
@@ -600,7 +766,7 @@ class MiningExecutor:
 
     def run_layout(self, layout: ZoneBatchLayout, *,
                    allow_overflow: bool = False,
-                   fused: bool | None = None) -> CodeCounts:
+                   fused: bool | None = None) -> RunOutcome:
         """Mine a :class:`ZoneBatchLayout` (dense or bucketed) exactly.
 
         Dispatch is decided by :meth:`resolve_fused`: the fused path
@@ -614,6 +780,10 @@ class MiningExecutor:
         merge (:func:`merge_partial_counts`).  Lemma 4.2's signed sum is
         associative over zones, so either split is exact; the differential
         tests assert fused == per-bucket == dense code-for-code.
+
+        Returns a :class:`RunOutcome` — the counts plus this run's own
+        dispatch stats (never read stats back off the executor; that is
+        the shared-state race the outcome type exists to close).
         """
         if self.resolve_fused(fused):
             return self.run_fused(layout, allow_overflow=allow_overflow)
@@ -625,17 +795,19 @@ class MiningExecutor:
                                 label=b.label)
                 for b in layout.buckets
             ]
-            self.last_run_stats = {
+            stats = {
                 "path": "per-bucket",
                 "launches": len(layout.buckets),
                 "spill_retries": 0,
             }
+            self._last_run_stats = stats
             self.obs.metrics.counter(
                 "repro_mining_launches_total",
                 path="per-bucket").inc(len(layout.buckets))
-            return merge_partial_counts(parts, merge_cap=self.merge_cap,
-                                        warn_label="zone-layout bucket",
-                                        obs=self.obs)
+            counts = merge_partial_counts(parts, merge_cap=self.merge_cap,
+                                          warn_label="zone-layout bucket",
+                                          obs=self.obs)
+            return RunOutcome(counts=counts, stats=stats)
 
     # -- fused single-launch path -------------------------------------------
 
@@ -687,7 +859,7 @@ class MiningExecutor:
                 fold_chunk, merge_cap)
 
     def run_fused(self, layout: ZoneBatchLayout, *,
-                  allow_overflow: bool = False) -> CodeCounts:
+                  allow_overflow: bool = False) -> RunOutcome:
         """Mine a layout in ONE bucket-native kernel launch, fold on-device.
 
         The layout is flattened to a :class:`~repro.core.tzp.
@@ -729,7 +901,7 @@ class MiningExecutor:
             with obs.tracer.span("mine.d2h"):
                 n_spilled = int(spilled)
             if n_spilled == 0:
-                self.last_run_stats = {
+                stats = {
                     "path": "fused",
                     "launches": 1,
                     "spill_retries": retries,
@@ -738,6 +910,7 @@ class MiningExecutor:
                     "n_slots": fl.n_slots,
                     "sweep_slots": fl.sweep_slots,
                 }
+                self._last_run_stats = stats
                 obs.metrics.counter("repro_mining_launches_total",
                                     path="fused").inc()
                 m = obs.metrics
@@ -745,7 +918,7 @@ class MiningExecutor:
                 m.gauge("repro_mining_fused_fold_chunk").set(fold_chunk)
                 m.gauge("repro_mining_fused_slots").set(fl.n_slots)
                 m.gauge("repro_mining_fused_sweep_slots").set(fl.sweep_slots)
-                return counts
+                return RunOutcome(counts=counts, stats=stats)
             need = max(2 * merge_cap, merge_cap + n_spilled, 8)
             new_cap = min(1 << (need - 1).bit_length(), cap_ceiling)
             warnings.warn(
@@ -773,6 +946,225 @@ class MiningExecutor:
             return (self.fused_execution_key(layout),)
         return tuple(self.execution_key(b.n_zones, b.e_cap)
                      for b in layout.buckets)
+
+    # -- config-lattice co-mining --------------------------------------------
+
+    def _check_comine_params(self, params) -> tuple:
+        params = tuple((int(d), int(l)) for d, l in params)
+        if not params:
+            raise ValueError("co-mine needs at least one (delta, l_max)")
+        if not self.spec.supports_comine:
+            raise ValueError(
+                f"backend {self.backend!r} does not support co-mining "
+                f"(its scan has no with_ts timestamp output)")
+        for d, l in params:
+            if not (1 <= d <= self.delta and 1 <= l <= self.l_max):
+                raise ValueError(
+                    f"co-mined config (delta={d}, l_max={l}) is not "
+                    f"dominated by the sweep config (delta={self.delta}, "
+                    f"l_max={self.l_max})")
+        return params
+
+    def run_layout_multi(self, layout: ZoneBatchLayout, params, *,
+                         allow_overflow: bool = False,
+                         fused: bool | None = None) -> MultiRunOutcome:
+        """Co-mine N member configs from ONE dominating Phase-1 sweep.
+
+        ``params`` is a sequence of ``(delta_i, l_max_i)`` pairs, each
+        dominated by this executor's ``(delta, l_max)`` (the planner's
+        :func:`~repro.core.planner.build_config_lattices` guarantees that
+        for lattice members).  The layout is swept exactly once per launch
+        at the dominating config with per-step absorption timestamps; each
+        member's count table is split out during the Phase-2 fold by
+        prefix-truncating candidates on those timestamps — byte-identical
+        to mining that member independently, at one sweep's cost.
+
+        Returns a :class:`MultiRunOutcome` with one exact
+        :class:`CodeCounts` per param (spills retry per member with a
+        doubled cap, exactly like the single-config paths).
+        """
+        params = self._check_comine_params(params)
+        if self.resolve_fused(fused):
+            return self.run_fused_multi(layout, params,
+                                        allow_overflow=allow_overflow)
+        self.check_layout_overflow(layout, allow_overflow=allow_overflow)
+        with self.obs.tracer.span("mine.layout", path="per-bucket-multi",
+                                  buckets=layout.n_buckets,
+                                  n_configs=len(params)):
+            parts: list[list[CodeCounts]] = [[] for _ in params]
+            retries_total = 0
+            for b in layout.buckets:
+                bucket_counts, retries = self._run_arrays_multi(
+                    b.u, b.v, b.t, b.valid, b.sign, params, label=b.label)
+                retries_total += retries
+                for member_parts, c in zip(parts, bucket_counts):
+                    member_parts.append(c)
+            self.obs.metrics.counter(
+                "repro_mining_launches_total",
+                path="per-bucket-multi").inc(len(layout.buckets))
+            counts = tuple(
+                merge_partial_counts(p, merge_cap=self.merge_cap,
+                                     warn_label="zone-layout bucket",
+                                     obs=self.obs)
+                for p in parts)
+            stats = {
+                "path": "per-bucket-multi",
+                "launches": len(layout.buckets),
+                "spill_retries": retries_total,
+                "n_configs": len(params),
+            }
+            self._last_run_stats = stats
+            return MultiRunOutcome(counts=counts, stats=stats)
+
+    def run_fused_multi(self, layout: ZoneBatchLayout, params, *,
+                        allow_overflow: bool = False) -> MultiRunOutcome:
+        """Co-mine a layout in ONE kernel launch with N on-device folds."""
+        params = self._check_comine_params(params)
+        self.check_layout_overflow(layout, allow_overflow=allow_overflow)
+        obs = self.obs
+        blk, fold_chunk, _ = self._fused_geometry(layout)
+        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk)
+        cap_ceiling = fl.n_slots + 1
+        caps = [min(self._fused_merge_cap(fold_chunk), cap_ceiling)
+                for _ in params]
+        with obs.tracer.span("mine.h2d", n_slots=fl.n_slots) as sp:
+            arrays = tuple(jnp.asarray(x) for x in (
+                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+            sp.sync(arrays)
+        retries = 0
+        while True:
+            with obs.tracer.span("mine.fused", n_slots=fl.n_slots,
+                                 n_configs=len(params), retry=retries) as sp:
+                out = _mine_fused_multi_jit(
+                    *arrays, delta=self.delta, l_max=self.l_max,
+                    scan=self.spec.fused_scan, blk=blk,
+                    fold_chunk=fold_chunk, params=params,
+                    merge_caps=tuple(caps),
+                )
+                sp.sync(out)
+            with obs.tracer.span("mine.d2h"):
+                spills = [int(sp_i) for _, sp_i in out]
+            if not any(spills):
+                stats = {
+                    "path": "fused-multi",
+                    "launches": 1,
+                    "spill_retries": retries,
+                    "merge_caps": tuple(caps),
+                    "fold_chunk": fold_chunk,
+                    "n_slots": fl.n_slots,
+                    "sweep_slots": fl.sweep_slots,
+                    "n_configs": len(params),
+                }
+                self._last_run_stats = stats
+                obs.metrics.counter("repro_mining_launches_total",
+                                    path="fused-multi").inc()
+                return MultiRunOutcome(
+                    counts=tuple(c for c, _ in out), stats=stats)
+            for i, n_spilled in enumerate(spills):
+                if n_spilled:
+                    need = max(2 * caps[i], caps[i] + n_spilled, 8)
+                    caps[i] = min(1 << (need - 1).bit_length(), cap_ceiling)
+            warnings.warn(
+                f"fused co-mine spilled {spills} unique code(s) across "
+                f"{len(params)} member config(s); retrying with "
+                f"merge_caps={caps}",
+                RuntimeWarning, stacklevel=3,
+            )
+            obs.metrics.counter("repro_mining_spill_retries_total",
+                                path="fused-multi").inc()
+            retries += 1
+
+    def _run_arrays_multi(self, u, v, t, valid, signs, params, *,
+                          label: str = ""):
+        """Co-mine raw [Z, E] zone arrays; returns (counts tuple, retries).
+
+        Mirrors :meth:`run_arrays`'s pad/chunk resolution, but always takes
+        the bounded hierarchical fold — the multi path has no legacy
+        whole-batch mode (an unchunked batch is simply one chunk).
+        """
+        u, v, t, valid, signs = (np.asarray(x)
+                                 for x in (u, v, t, valid, signs))
+        z, e = u.shape
+        with self.obs.tracer.span("mine.launch", z=z, e=e, label=label,
+                                  multi=len(params)) as sp:
+            zc = self._zone_chunk_for(z, e)
+            if zc and zc < z and z % zc != 0:
+                if self.pad_policy == "raise":
+                    where = f" in bucket {label!r}" if label else ""
+                    raise ZoneChunkError(
+                        f"zone count {z}{where} is not divisible by "
+                        f"zone_chunk {zc} (pad_policy='raise'); the "
+                        f"trailing {z % zc} zone(s) would need inert "
+                        f"padding rows — pad the batch (pad_policy='pad') "
+                        f"or pick a divisor"
+                    )
+                u, v, t, valid, signs = pad_zone_arrays(
+                    u, v, t, valid, signs, n_rows=z + (zc - z % zc))
+                z = u.shape[0]
+            sp.set(zone_chunk=zc)
+            return self._run_bounded_multi(u, v, t, valid, signs, zc, params)
+
+    def _run_bounded_multi(self, u, v, t, valid, signs, zc, params):
+        """Multi-config bounded fold with per-member spill/retry."""
+        z, e = u.shape
+        cap_ceiling = z * e + 1
+        base_cap = min(self._merge_cap_for(zc, z, e), cap_ceiling)
+        caps = [base_cap for _ in params]
+        retries = 0
+        while True:
+            if not self.spec.jittable:
+                out = self._fold_host_scan_multi(u, v, t, valid, signs, zc,
+                                                 params, caps)
+            else:
+                out = _mine_multi_jit(
+                    jnp.asarray(u), jnp.asarray(v), jnp.asarray(t),
+                    jnp.asarray(valid), jnp.asarray(signs),
+                    delta=self.delta, l_max=self.l_max, scan=self.spec.scan,
+                    zone_chunk=zc, params=params, merge_caps=tuple(caps),
+                )
+            spills = [int(sp) for _, sp in out]
+            if not any(spills):
+                return tuple(c for c, _ in out), retries
+            for i, n_spilled in enumerate(spills):
+                if n_spilled:
+                    need = max(2 * caps[i], caps[i] + n_spilled, 8)
+                    caps[i] = min(1 << (need - 1).bit_length(), cap_ceiling)
+            warnings.warn(
+                f"co-mine hierarchical merge spilled {spills} unique "
+                f"code(s) across {len(params)} member config(s); retrying "
+                f"with merge_caps={caps}",
+                RuntimeWarning, stacklevel=3,
+            )
+            self.obs.metrics.counter("repro_mining_spill_retries_total",
+                                     path="bucket-multi").inc()
+            retries += 1
+
+    def _fold_host_scan_multi(self, u, v, t, valid, signs, zc, params, caps):
+        """Chunked multi-config fold for host-only backends."""
+        z, e = u.shape
+        zc = zc if (zc and zc < z) else z
+        nchunk = _n_chunks(z, zc)
+        limbs = encoding.n_limbs(self.l_max)
+        carries = [
+            (aggregation.empty_counts(cap, limbs), jnp.int32(0))
+            for cap in caps]
+        for i in range(nchunk):
+            sl = slice(i * zc, (i + 1) * zc)
+            res = self.spec.scan(u[sl], v[sl], t[sl], valid[sl],
+                                 delta=self.delta, l_max=self.l_max,
+                                 with_ts=True)
+            codes = jnp.asarray(res.code)
+            lengths = jnp.asarray(res.length)
+            ts = jnp.asarray(res.ts)
+            sg = jnp.asarray(signs[sl])
+            for ci, ((d_i, l_i), cap) in enumerate(zip(params, caps)):
+                carry, spilled = carries[ci]
+                carries[ci] = _derive_merge_chunk_jit(
+                    carry, spilled, codes, lengths, ts, sg,
+                    d_i=d_i, l_i=l_i, delta=self.delta, l_max=self.l_max,
+                    merge_cap=cap,
+                )
+        return carries
 
     def run_arrays(self, u, v, t, valid, signs, *,
                    label: str = "") -> CodeCounts:

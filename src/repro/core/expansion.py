@@ -16,6 +16,13 @@ State (structure-of-arrays over candidates):
   ``n_nodes`` int32[C]  node-table population
   ``nodes``   int32[C,K] first-occurrence node table, K = l_max + 1, -1 = empty
   ``code``    int32[C,L] multi-limb relabeling code (see core.encoding)
+  ``ts``      int32[C,l_max] per-step absorption timestamps (``with_ts``
+              only; ``ts[:, k]`` is the timestamp of the k-th absorbed
+              edge, ``ts[:, 0]`` the seed time).  The config-lattice
+              co-mining path derives every smaller ``(delta, l_max)``
+              config's counts from one dominating sweep by prefix-
+              truncating candidates on these timestamps
+              (:func:`derive_lengths`).
 """
 
 from __future__ import annotations
@@ -36,6 +43,7 @@ class ZoneState(NamedTuple):
     n_nodes: jax.Array
     nodes: jax.Array
     code: jax.Array
+    ts: jax.Array | None = None
 
 
 class ZoneResult(NamedTuple):
@@ -43,9 +51,10 @@ class ZoneResult(NamedTuple):
 
     code: jax.Array     # int32[C, L]
     length: jax.Array   # int32[C] (0 for padding slots)
+    ts: jax.Array | None = None   # int32[C, l_max] absorption timestamps
 
 
-def init_state(e_cap: int, l_max: int) -> ZoneState:
+def init_state(e_cap: int, l_max: int, *, with_ts: bool = False) -> ZoneState:
     k = l_max + 1
     return ZoneState(
         length=jnp.zeros(e_cap, jnp.int32),
@@ -54,6 +63,7 @@ def init_state(e_cap: int, l_max: int) -> ZoneState:
         n_nodes=jnp.zeros(e_cap, jnp.int32),
         nodes=jnp.full((e_cap, k), -1, jnp.int32),
         code=encoding.empty_code((e_cap,), l_max),
+        ts=jnp.zeros((e_cap, l_max), jnp.int32) if with_ts else None,
     )
 
 
@@ -128,32 +138,79 @@ def step(state: ZoneState, edge, *, delta: int, l_max: int) -> ZoneState:
     )
     code = jnp.where(seed[:, None], seed_code, code)
 
+    ts = state.ts
+    if ts is not None:
+        # record this edge's timestamp at the step it was absorbed: slot
+        # state.length for an extension (pre-increment), slot 0 for a seed
+        step_iota = jnp.arange(ts.shape[1], dtype=jnp.int32)[None, :]
+        ts = jnp.where(extend[:, None] & (step_iota == state.length[:, None]),
+                       t, ts)
+        ts = jnp.where(seed[:, None] & (step_iota == 0), t, ts)
+
     return ZoneState(length=length, last_t=last_t, done=done,
-                     n_nodes=n_nodes, nodes=nodes, code=code)
+                     n_nodes=n_nodes, nodes=nodes, code=code, ts=ts)
 
 
-@functools.partial(jax.jit, static_argnames=("delta", "l_max"))
-def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+@functools.partial(jax.jit, static_argnames=("delta", "l_max", "with_ts"))
+def scan_zone(u, v, t, valid, *, delta: int, l_max: int,
+              with_ts: bool = False) -> ZoneResult:
     """Run the full expansion over one zone's padded edge stream.
 
     Args:
       u, v, t: int32[E] padded edge stream (time-ordered within the zone).
       valid:   bool[E] real-edge mask.
+      with_ts: also return per-step absorption timestamps (the co-mining
+        path's input; the single-config path pays nothing for the flag).
     Returns:
       ZoneResult with per-seed final codes; padding slots have length 0.
     """
     e_cap = u.shape[0]
-    state = init_state(e_cap, l_max)
+    state = init_state(e_cap, l_max, with_ts=with_ts)
 
     def body(state, edge):
         return step(state, edge, delta=delta, l_max=l_max), None
 
     slots = jnp.arange(e_cap, dtype=jnp.int32)
     state, _ = jax.lax.scan(body, state, (u, v, t, valid, slots))
-    return ZoneResult(code=state.code, length=state.length)
+    return ZoneResult(code=state.code, length=state.length, ts=state.ts)
 
 
-def scan_zones(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+def scan_zones(u, v, t, valid, *, delta: int, l_max: int,
+               with_ts: bool = False) -> ZoneResult:
     """vmap of :func:`scan_zone` over a [Z, E] zone batch."""
-    fn = functools.partial(scan_zone, delta=delta, l_max=l_max)
+    fn = functools.partial(scan_zone, delta=delta, l_max=l_max,
+                           with_ts=with_ts)
     return jax.vmap(fn)(u, v, t, valid)
+
+
+def derive_lengths(length, ts, *, delta: int, l_max: int):
+    """Prefix length of each dominating-sweep candidate under a smaller config.
+
+    The config-lattice co-mining lemma: zone streams are time-sorted, so
+    for ``delta <= delta_dom`` and ``l_max <= l_max_dom`` the process a
+    smaller config would have mined for a candidate is exactly the longest
+    prefix of the dominating config's absorbed edge sequence in which every
+    consecutive absorption gap ``ts[k] - ts[k-1]`` is ``<= delta``, capped
+    at ``l_max`` edges.  (While the two configs agree on a prefix they make
+    identical extension decisions — extension needs a node overlap, a
+    strictly increasing timestamp, and a gap ``<= delta``; the first
+    dominating absorption whose gap exceeds the smaller ``delta`` also
+    proves an intervening stream edge timed the smaller config out, because
+    any in-between edge ``t'`` satisfies ``ts[k-1] <= t' <= ts[k]``.)
+
+    Args:
+      length: int32[...] dominating-sweep process lengths.
+      ts:     int32[..., l_max_dom] absorption timestamps (``with_ts``).
+    Returns:
+      int32[...] prefix lengths under ``(delta, l_max)``; 0 stays 0.
+    """
+    l_dom = ts.shape[-1]
+    if l_dom > 1:
+        steps = jnp.arange(1, l_dom, dtype=jnp.int32)
+        gaps = ts[..., 1:] - ts[..., :-1]
+        ok = (steps < length[..., None]) & (gaps <= delta)
+        run = jnp.cumprod(ok.astype(jnp.int32), axis=-1).sum(axis=-1)
+    else:
+        run = jnp.zeros_like(length)
+    out = jnp.minimum(1 + run, l_max).astype(jnp.int32)
+    return jnp.where(length > 0, out, 0)

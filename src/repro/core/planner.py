@@ -291,6 +291,103 @@ def padded_sweep_slots(bucket_shapes) -> int:
     return sum(int(z) * int(e) ** 2 for z, e in bucket_shapes)
 
 
+# ---------------------------------------------------------------------------
+# Config lattice — grouping N tenant configs into shared dominating sweeps.
+# ---------------------------------------------------------------------------
+
+# Fields a lattice member may vary while still sharing one Phase-1 sweep.
+# ``delta``/``l_max`` shrink losslessly from the dominating sweep by prefix-
+# truncating candidates on absorption timestamps; ``omega`` only shapes zone
+# geometry (never counts), so planning at the max omega is exact.
+_LATTICE_FREE_FIELDS = ("delta", "l_max", "omega")
+
+
+@dataclasses.dataclass(frozen=True)
+class ConfigLattice:
+    """One co-minable group of configs plus its dominating sweep config.
+
+    ``members`` preserve the caller's order; ``indices`` are their
+    positions in the original request, so ``discover_many`` can return
+    results aligned with its input.  ``dominating`` is the member-wise
+    maximum over the free fields — every member's process table is a
+    prefix-truncation of the dominating sweep's (see
+    :func:`repro.core.expansion.derive_lengths`).
+    """
+
+    dominating: object                  # MiningConfig (duck-typed)
+    members: tuple                      # tuple[MiningConfig, ...]
+    indices: tuple[int, ...]
+
+    @property
+    def n_configs(self) -> int:
+        return len(self.members)
+
+    @property
+    def params(self) -> tuple[tuple[int, int], ...]:
+        """Per-member ``(delta, l_max)`` — the executor fold's static key."""
+        return tuple((m.delta, m.l_max) for m in self.members)
+
+
+def lattice_key(config) -> tuple:
+    """Compatibility key: everything about a config *except* the free
+    fields.  Configs with equal keys can share one dominating sweep."""
+    d = config.to_dict()
+    for f in _LATTICE_FREE_FIELDS:
+        d.pop(f, None)
+    return tuple(sorted(d.items()))
+
+
+def dominating_config(configs):
+    """The member-wise max config a lattice plans its shared sweep at."""
+    if not configs:
+        raise ValueError("dominating_config needs at least one config")
+    return configs[0].with_updates(
+        delta=max(c.delta for c in configs),
+        l_max=max(c.l_max for c in configs),
+        omega=max(c.omega for c in configs),
+    )
+
+
+def build_config_lattices(configs) -> list[ConfigLattice]:
+    """Group configs into co-minable lattices (input order preserved).
+
+    Configs differing only in ``delta``/``l_max``/``omega`` land in one
+    lattice; anything else (backend, e_cap, zone layout, merge caps, ...)
+    splits them, because those change the sweep itself rather than how its
+    candidate table is folded.
+    """
+    groups: dict[tuple, list[int]] = {}
+    for i, cfg in enumerate(configs):
+        groups.setdefault(lattice_key(cfg), []).append(i)
+    return [
+        ConfigLattice(
+            dominating=dominating_config([configs[i] for i in idxs]),
+            members=tuple(configs[i] for i in idxs),
+            indices=tuple(idxs),
+        )
+        for idxs in groups.values()
+    ]
+
+
+def comine_peak_bytes(zone_chunk: int, e_cap: int, l_max_dom: int, *,
+                      merge_caps, mem_model=None) -> int:
+    """Peak estimate of the multi-config hierarchical fold.
+
+    One dominating-config scan chunk (plus its ``ts`` int32[E, l_max]
+    timestamp table) is resident at a time, but every member keeps its own
+    bounded merge carry and the fold sorts one member's table at a time —
+    so the count-table term scales with the *largest* member cap while the
+    carry term sums over members.
+    """
+    model = mem_model or ref_zone_bytes
+    scan_state = zone_chunk * (model(e_cap, l_max_dom) + 4 * l_max_dom * e_cap)
+    limbs = encoding.n_limbs(l_max_dom)
+    carry = sum(cap * 4 * (limbs + 1) for cap in merge_caps)
+    worst = max(merge_caps, default=0)
+    return scan_state + carry + count_table_bytes(
+        worst + zone_chunk * e_cap, l_max_dom)
+
+
 def suggest_e_cap(
     *,
     l_max: int,

@@ -19,7 +19,8 @@ from . import encoding
 from .expansion import ZoneResult
 
 
-def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+def scan_zone(u, v, t, valid, *, delta: int, l_max: int,
+              with_ts: bool = False) -> ZoneResult:
     """Scan one padded zone; returns numpy (code[E, L], length[E])."""
     u = np.asarray(u)
     v = np.asarray(v)
@@ -29,12 +30,14 @@ def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
     limbs = encoding.n_limbs(l_max)
     code = np.zeros((e, limbs), np.int32)
     length = np.zeros(e, np.int32)
+    ts = np.zeros((e, l_max), np.int32) if with_ts else None
 
     idx = np.flatnonzero(valid)
     for si, seed in enumerate(idx):
         edges = [(int(u[seed]), int(v[seed]))]
         nodes = {int(u[seed]), int(v[seed])}
         last_t = int(t[seed])
+        times = [last_t]
         j = si + 1
         while len(edges) < l_max:
             extended = False
@@ -46,6 +49,7 @@ def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
                     nodes.add(int(u[jj]))
                     nodes.add(int(v[jj]))
                     last_t = tj
+                    times.append(tj)
                     extended = True
                     j += 1
                     break
@@ -54,10 +58,13 @@ def scan_zone(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
                 break
         code[seed] = encoding.encode_process_np(edges, l_max)
         length[seed] = len(edges)
-    return ZoneResult(code=code, length=length)
+        if ts is not None:
+            ts[seed, :len(times)] = times
+    return ZoneResult(code=code, length=length, ts=ts)
 
 
-def scan_zones(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
+def scan_zones(u, v, t, valid, *, delta: int, l_max: int,
+               with_ts: bool = False) -> ZoneResult:
     """Reference-signature scan over a [Z, E] zone batch (numpy arrays)."""
     u = np.asarray(u)
     v = np.asarray(v)
@@ -67,9 +74,12 @@ def scan_zones(u, v, t, valid, *, delta: int, l_max: int) -> ZoneResult:
     limbs = encoding.n_limbs(l_max)
     code = np.zeros((z, e, limbs), np.int32)
     length = np.zeros((z, e), np.int32)
+    ts = np.zeros((z, e, l_max), np.int32) if with_ts else None
     for zi in range(z):
         res = scan_zone(u[zi], v[zi], t[zi], valid[zi],
-                        delta=delta, l_max=l_max)
+                        delta=delta, l_max=l_max, with_ts=with_ts)
         code[zi] = res.code
         length[zi] = res.length
-    return ZoneResult(code=code, length=length)
+        if ts is not None:
+            ts[zi] = res.ts
+    return ZoneResult(code=code, length=length, ts=ts)

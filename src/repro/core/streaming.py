@@ -44,6 +44,38 @@ from .executor import MiningExecutor
 from .temporal_graph import TemporalGraph
 
 
+def validate_edge_chunk(u, v, t) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Validate and coerce one edge chunk to ``(int32 u, int32 v, int64 t)``.
+
+    ``np.asarray(x, np.int32)`` silently wraps out-of-range node ids and
+    truncates float timestamps — a tenant sending ids >= 2**31 would get
+    corrupted motif counts with no error.  This is the single ingestion
+    guard (:class:`StreamingMiner` and the serving ``MotifSession`` both
+    route through it): non-integer dtypes and values outside the target
+    dtype's range raise ``ValueError`` before anything is buffered.
+    """
+    out = []
+    for name, x, dtype in (("u", u, np.int32), ("v", v, np.int32),
+                           ("t", t, np.int64)):
+        arr = np.asarray(x)
+        if arr.dtype.kind not in "iu":
+            raise ValueError(
+                f"edge chunk field {name!r} must be integer-typed, got "
+                f"dtype {arr.dtype} (floats would be silently truncated)")
+        info = np.iinfo(dtype)
+        if arr.size and (int(arr.min()) < info.min
+                         or int(arr.max()) > info.max):
+            raise ValueError(
+                f"edge chunk field {name!r} has values outside "
+                f"{np.dtype(dtype).name} range [{info.min}, {info.max}]; "
+                f"they would silently wrap and corrupt motif counts")
+        out.append(arr.astype(dtype, copy=False).ravel())
+    u, v, t = out
+    if not (u.shape == v.shape == t.shape):
+        raise ValueError("u, v, t must have identical shapes")
+    return u, v, t
+
+
 def _merge_into(total: dict[str, int], part: dict[str, int]) -> None:
     for code, cnt in part.items():
         new = total.get(code, 0) + cnt
@@ -223,12 +255,12 @@ class StreamingMiner:
     # -- ingestion ----------------------------------------------------------
 
     def ingest(self, u, v, t) -> None:
-        """Append one time-ordered edge chunk and advance the frontier."""
-        u = np.asarray(u, np.int32).ravel()
-        v = np.asarray(v, np.int32).ravel()
-        t = np.asarray(t, np.int64).ravel()
-        if not (u.shape == v.shape == t.shape):
-            raise ValueError("u, v, t must have identical shapes")
+        """Append one time-ordered edge chunk and advance the frontier.
+
+        Raises ``ValueError`` on non-integer or out-of-range input (see
+        :func:`validate_edge_chunk`) — nothing is buffered on rejection.
+        """
+        u, v, t = validate_edge_chunk(u, v, t)
         if t.size == 0:
             return
         if np.any(np.diff(t) < 0):
@@ -333,7 +365,7 @@ class StreamingMiner:
                 pair, plan, layout="dense",
                 e_cap=tzp.next_pow2(max(g_cnt, 8)),
             )
-            counts = self.executor.run_layout(layout)
+            counts = self.executor.run_layout(layout).counts
             _merge_into(self._counts,
                         transitions.device_counts_to_dict(counts))
         self.n_zones_finalized += 2
@@ -425,7 +457,7 @@ class StreamingMiner:
                 pad_edges_to=64,
             )
             sp.set(n_zones=plan.n_zones)
-            tail_counts = self.executor.run_layout(layout)
+            tail_counts = self.executor.run_layout(layout).counts
             self.last_tail_layout = layout.summary()
         return (transitions.device_counts_to_dict(tail_counts),
                 plan.n_zones, layout.e_cap)

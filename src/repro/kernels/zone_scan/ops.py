@@ -22,31 +22,37 @@ from .zone_scan import fused_zone_scan_flat, zone_scan_pallas
 
 
 @functools.partial(
-    jax.jit, static_argnames=("delta", "l_max", "c_blk", "e_blk", "interpret")
+    jax.jit,
+    static_argnames=("delta", "l_max", "c_blk", "e_blk", "interpret",
+                     "with_ts"),
 )
 def scan_zone(
     u, v, t, valid, *, delta: int, l_max: int,
     c_blk: int = DEFAULT_BLOCKS["c_blk"], e_blk: int = DEFAULT_BLOCKS["e_blk"],
-    interpret: bool | None = None,
+    interpret: bool | None = None, with_ts: bool = False,
 ) -> ZoneResult:
     # runs at trace time (inside jit): counts kernel re-traces, not launches
     note_trace("zone_scan")
-    code, length = zone_scan_pallas(
+    out = zone_scan_pallas(
         u, v, t, valid, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
-        interpret=interpret,
+        interpret=interpret, with_ts=with_ts,
     )
+    if with_ts:
+        code, length, ts = out
+        return ZoneResult(code=code, length=length, ts=ts)
+    code, length = out
     return ZoneResult(code=code, length=length)
 
 
 def scan_zones(
     u, v, t, valid, *, delta: int, l_max: int,
     c_blk: int = DEFAULT_BLOCKS["c_blk"], e_blk: int = DEFAULT_BLOCKS["e_blk"],
-    interpret: bool | None = None,
+    interpret: bool | None = None, with_ts: bool = False,
 ) -> ZoneResult:
     """vmap over a [Z, E] zone batch (same signature as the reference)."""
     fn = functools.partial(
         scan_zone, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
-        interpret=interpret,
+        interpret=interpret, with_ts=with_ts,
     )
     return jax.vmap(fn)(u, v, t, valid)
 
@@ -54,16 +60,18 @@ def scan_zones(
 def scan_flat(
     u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
     blk: int = FUSED_BLK_DEFAULT, interpret: bool | None = None,
+    with_ts: bool = False,
 ):
     """Single-launch fused scan over a concatenated flat slot stream.
 
     The "pallas" registry entry's ``fused_loader`` target.  Traceable (the
     executor jits it together with the on-device Phase-2 fold); returns
     raw ``(code int32[S, L], length int32[S])`` per candidate slot rather
-    than a :class:`ZoneResult` — the flat stream has no zone axis.
+    than a :class:`ZoneResult` — the flat stream has no zone axis.  With
+    ``with_ts`` a third ``ts int32[S, l_max]`` array is appended.
     """
     note_trace("zone_scan_flat")
     return fused_zone_scan_flat(
         u, v, t, valid, zone_id, hi, delta=delta, l_max=l_max, blk=blk,
-        interpret=interpret,
+        interpret=interpret, with_ts=with_ts,
     )

@@ -13,7 +13,8 @@ from repro.core.expansion import ZoneResult, scan_zone, scan_zones
 __all__ = ["ZoneResult", "scan_flat_ref", "scan_zone", "scan_zones"]
 
 
-def scan_flat_ref(u, v, t, valid, zone_id, *, delta: int, l_max: int):
+def scan_flat_ref(u, v, t, valid, zone_id, *, delta: int, l_max: int,
+                  with_ts: bool = False):
     """Oracle for ``fused_zone_scan_flat``: reassemble each zone from the
     concatenated slot stream (slots of a zone are contiguous and
     time-ordered) and run the per-zone reference scan, scattering results
@@ -25,16 +26,19 @@ def scan_flat_ref(u, v, t, valid, zone_id, *, delta: int, l_max: int):
     s = u.shape[0]
     code = None
     length = np.zeros(s, np.int32)
+    ts = np.zeros((s, l_max), np.int32) if with_ts else None
     for z in np.unique(zone_id[zone_id >= 0]):
         idx = np.flatnonzero(zone_id == z)
         res = scan_zone(u[idx], v[idx], t[idx], valid[idx],
-                        delta=delta, l_max=l_max)
+                        delta=delta, l_max=l_max, with_ts=with_ts)
         if code is None:
             code = np.zeros((s, res.code.shape[1]), np.int32)
         code[idx] = np.asarray(res.code)
         length[idx] = np.asarray(res.length)
+        if ts is not None:
+            ts[idx] = np.asarray(res.ts)
     if code is None:
         from repro.core import encoding
 
         code = np.zeros((s, encoding.n_limbs(l_max)), np.int32)
-    return ZoneResult(code=code, length=length)
+    return ZoneResult(code=code, length=length, ts=ts)

@@ -73,12 +73,14 @@ _I32_MAX = jnp.iinfo(jnp.int32).max
 
 
 def _edge_update(state, *, u, v, t, seed, gate, delta, l_max, iota_k,
-                 li_iota):
+                 li_iota, iota_l=None):
     """Apply one edge to a candidate block's expansion state.
 
     The single copy of the Phase-1 transition rule shared by the dense and
     fused kernels.  ``state`` is ``(length, last_t, done, n_nodes, nodes,
-    code)`` — int32 arrays of shape [1, C] (nodes [K, C], code [L, C]).
+    code)`` — int32 arrays of shape [1, C] (nodes [K, C], code [L, C]) —
+    plus a trailing ``ts`` [l_max, C] absorption-timestamp block when
+    ``iota_l`` (an int32[l_max, C] step iota) is given.
 
     Args:
       u, v, t: this edge's scalars (int32).
@@ -87,8 +89,14 @@ def _edge_update(state, *, u, v, t, seed, gate, delta, l_max, iota_k,
       gate: bool — per-lane eligibility of this edge for extension and
         time-out (edge validity, and for the fused kernel same-zone
         membership).  Scalar or [1, C]; broadcasting handles both.
+      iota_l: step iota enabling per-step timestamp tracking (the config-
+        lattice co-mining input); None keeps the 6-element state.
     """
-    length, last_t, done, n_nodes, nodes, code = state
+    if iota_l is None:
+        length, last_t, done, n_nodes, nodes, code = state
+        ts = None
+    else:
+        length, last_t, done, n_nodes, nodes, code, ts = state
     k = iota_k.shape[0]
 
     active = (length > 0) & ~done
@@ -141,15 +149,30 @@ def _edge_update(state, *, u, v, t, seed, gate, delta, l_max, iota_k,
     seed_code = jnp.where(li_iota == 0, seed_digit0 + seed_digit1, 0)
     code = jnp.where(seed, seed_code, code)
 
-    return (new_length, new_last_t, done | timed_out, new_nn, nodes, code)
+    out = (new_length, new_last_t, done | timed_out, new_nn, nodes, code)
+    if ts is None:
+        return out
+    # record this edge's timestamp at the step it was absorbed: row
+    # `length` (pre-increment) for an extension, row 0 for a seed
+    ts = jnp.where(extend & (iota_l == length), t, ts)
+    ts = jnp.where(seed & (iota_l == 0), t, ts)
+    return out + (ts,)
 
 
 def _kernel(
-    t_cand_ref, u_ref, v_ref, t_ref, valid_ref,
-    code_out_ref, len_out_ref,
-    length_ref, last_t_ref, done_ref, nn_ref, nodes_ref, code_ref,
-    *, delta: int, l_max: int, c_blk: int, e_blk: int, n_e_blocks: int,
+    t_cand_ref, u_ref, v_ref, t_ref, valid_ref, *refs,
+    delta: int, l_max: int, c_blk: int, e_blk: int, n_e_blocks: int,
+    with_ts: bool,
 ):
+    if with_ts:
+        (code_out_ref, len_out_ref, ts_out_ref,
+         length_ref, last_t_ref, done_ref, nn_ref, nodes_ref, code_ref,
+         ts_ref) = refs
+    else:
+        (code_out_ref, len_out_ref,
+         length_ref, last_t_ref, done_ref, nn_ref, nodes_ref,
+         code_ref) = refs
+        ts_out_ref = ts_ref = None
     ci = pl.program_id(0)
     ei = pl.program_id(1)
     k = l_max + 1
@@ -163,6 +186,8 @@ def _kernel(
         nn_ref[...] = jnp.zeros_like(nn_ref)
         nodes_ref[...] = jnp.full_like(nodes_ref, -1)
         code_ref[...] = jnp.zeros_like(code_ref)
+        if ts_ref is not None:
+            ts_ref[...] = jnp.zeros_like(ts_ref)
 
     c_base = ci * c_blk
     e_base = ei * e_blk
@@ -175,6 +200,8 @@ def _kernel(
         iota_c = jax.lax.broadcasted_iota(jnp.int32, (1, c_blk), 1) + c_base
         iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, c_blk), 0)
         li_iota = jax.lax.broadcasted_iota(jnp.int32, (limbs, c_blk), 0)
+        iota_l = (jax.lax.broadcasted_iota(jnp.int32, (l_max, c_blk), 0)
+                  if with_ts else None)
 
         def body(j, _):
             u = u_ref[0, j]
@@ -186,17 +213,23 @@ def _kernel(
                 length_ref[...], last_t_ref[...], done_ref[...] != 0,
                 nn_ref[...], nodes_ref[...], code_ref[...],
             )
-            length, last_t, done, nn, nodes, code = _edge_update(
+            if with_ts:
+                state = state + (ts_ref[...],)
+            out = _edge_update(
                 state, u=u, v=v, t=t,
                 seed=(iota_c == e_base + j) & valid, gate=valid,
                 delta=delta, l_max=l_max, iota_k=iota_k, li_iota=li_iota,
+                iota_l=iota_l,
             )
+            length, last_t, done, nn, nodes, code = out[:6]
             length_ref[...] = length
             last_t_ref[...] = last_t
             done_ref[...] = done.astype(jnp.int32)
             nn_ref[...] = nn
             nodes_ref[...] = nodes
             code_ref[...] = code
+            if with_ts:
+                ts_ref[...] = out[6]
             return 0
 
         jax.lax.fori_loop(0, e_blk, body, 0)
@@ -205,18 +238,24 @@ def _kernel(
     def _flush():
         code_out_ref[...] = code_ref[...]
         len_out_ref[...] = length_ref[...]
+        if ts_out_ref is not None:
+            ts_out_ref[...] = ts_ref[...]
 
 
 def zone_scan_pallas(
     u, v, t, valid, *, delta: int, l_max: int,
     c_blk: int = 512, e_blk: int = 256, interpret: bool | None = None,
+    with_ts: bool = False,
 ):
     """Run the Pallas zone-scan over one padded zone.
 
     Args:
       u, v, t: int32[E]; valid: bool[E].  E is padded up to block multiples.
+      with_ts: also return per-step absorption timestamps int32[E, l_max]
+        (the config-lattice co-mining input).
     Returns:
-      (code int32[E, L], length int32[E]) per seed candidate.
+      (code int32[E, L], length int32[E]) per seed candidate, plus
+      ts int32[E, l_max] when ``with_ts``.
     """
     interpret = resolve_interpret(interpret)
     e = u.shape[0]
@@ -244,9 +283,30 @@ def zone_scan_pallas(
 
     kernel = functools.partial(
         _kernel, delta=delta, l_max=l_max, c_blk=c_blk, e_blk=e_blk,
-        n_e_blocks=n_e_blocks,
+        n_e_blocks=n_e_blocks, with_ts=with_ts,
     )
-    code, length = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((limbs, c_blk), lambda ci, ei: (0, ci)),
+        pl.BlockSpec((1, c_blk), lambda ci, ei: (0, ci)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((limbs, e_pad), jnp.int32),
+        jax.ShapeDtypeStruct((1, e_pad), jnp.int32),
+    ]
+    scratch_shapes = [
+        pltpu.VMEM((1, c_blk), jnp.int32),      # length
+        pltpu.VMEM((1, c_blk), jnp.int32),      # last_t
+        pltpu.VMEM((1, c_blk), jnp.int32),      # done
+        pltpu.VMEM((1, c_blk), jnp.int32),      # n_nodes
+        pltpu.VMEM((k, c_blk), jnp.int32),      # nodes
+        pltpu.VMEM((limbs, c_blk), jnp.int32),  # code
+    ]
+    if with_ts:
+        out_specs.append(
+            pl.BlockSpec((l_max, c_blk), lambda ci, ei: (0, ci)))
+        out_shape.append(jax.ShapeDtypeStruct((l_max, e_pad), jnp.int32))
+        scratch_shapes.append(pltpu.VMEM((l_max, c_blk), jnp.int32))  # ts
+    outs = pl.pallas_call(
         kernel,
         grid=(n_c_blocks, n_e_blocks),
         in_specs=[
@@ -256,25 +316,15 @@ def zone_scan_pallas(
             pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # t
             pl.BlockSpec((1, e_blk), lambda ci, ei: (0, ei)),   # valid
         ],
-        out_specs=[
-            pl.BlockSpec((limbs, c_blk), lambda ci, ei: (0, ci)),
-            pl.BlockSpec((1, c_blk), lambda ci, ei: (0, ci)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((limbs, e_pad), jnp.int32),
-            jax.ShapeDtypeStruct((1, e_pad), jnp.int32),
-        ],
-        scratch_shapes=[
-            pltpu.VMEM((1, c_blk), jnp.int32),      # length
-            pltpu.VMEM((1, c_blk), jnp.int32),      # last_t
-            pltpu.VMEM((1, c_blk), jnp.int32),      # done
-            pltpu.VMEM((1, c_blk), jnp.int32),      # n_nodes
-            pltpu.VMEM((k, c_blk), jnp.int32),      # nodes
-            pltpu.VMEM((limbs, c_blk), jnp.int32),  # code
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=scratch_shapes,
         interpret=interpret,
     )(t2, u2, v2, t2, valid2)
 
+    code, length = outs[0], outs[1]
+    if with_ts:
+        return code.T[:e], length[0, :e], outs[2].T[:e]
     return code.T[:e], length[0, :e]
 
 
@@ -286,8 +336,8 @@ def zone_scan_pallas(
 def _fused_kernel(
     hi_ref, u_ref, v_ref, t_ref, valid_ref, zid_ref,
     lane_t_ref, lane_valid_ref, lane_zid_ref,
-    code_out_ref, len_out_ref,
-    *, delta: int, l_max: int, blk: int,
+    code_out_ref, len_out_ref, *maybe_ts_out_ref,
+    delta: int, l_max: int, blk: int, with_ts: bool,
 ):
     """One candidate block of the concatenated flat slot stream.
 
@@ -310,6 +360,8 @@ def _fused_kernel(
     iota_lane = jax.lax.broadcasted_iota(jnp.int32, (1, blk), 1) + base
     iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, blk), 0)
     li_iota = jax.lax.broadcasted_iota(jnp.int32, (limbs, blk), 0)
+    iota_l = (jax.lax.broadcasted_iota(jnp.int32, (l_max, blk), 0)
+              if with_ts else None)
 
     # latest seed time among this block's real lanes: the Lemma-4.1 horizon
     t_seed_max = jnp.max(jnp.where(lane_valid, lane_t, _I32_MIN))
@@ -322,6 +374,8 @@ def _fused_kernel(
         jnp.full((k, blk), -1, jnp.int32),         # nodes
         jnp.zeros((limbs, blk), jnp.int32),        # code
     )
+    if with_ts:
+        state0 = state0 + (jnp.zeros((l_max, blk), jnp.int32),)  # ts
 
     def chunk_body(ci, state):
         off = base + ci * blk
@@ -349,7 +403,7 @@ def _fused_kernel(
                     seed=(iota_lane == off + j) & evalid,
                     gate=evalid & (czid[j] == lane_zid),
                     delta=delta, l_max=l_max, iota_k=iota_k,
-                    li_iota=li_iota,
+                    li_iota=li_iota, iota_l=iota_l,
                 )
             return jax.lax.fori_loop(0, blk, body, st)
 
@@ -360,15 +414,16 @@ def _fused_kernel(
     # zone they are not strictly later in time), and ends at the last
     # lane's zone end.
     n_chunks = (hi - base) // blk
-    length, _, _, _, _, code = jax.lax.fori_loop(0, n_chunks, chunk_body,
-                                                 state0)
-    code_out_ref[...] = code
-    len_out_ref[...] = length
+    state = jax.lax.fori_loop(0, n_chunks, chunk_body, state0)
+    code_out_ref[...] = state[5]
+    len_out_ref[...] = state[0]
+    if with_ts:
+        maybe_ts_out_ref[0][...] = state[6]
 
 
 def fused_zone_scan_flat(
     u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
-    blk: int = 512, interpret: bool | None = None,
+    blk: int = 512, interpret: bool | None = None, with_ts: bool = False,
 ):
     """Single-launch ragged zone scan over a concatenated flat slot stream.
 
@@ -385,7 +440,8 @@ def fused_zone_scan_flat(
         block's sweep bound).
 
     Returns:
-      (code int32[S, L], length int32[S]) per seed candidate slot.
+      (code int32[S, L], length int32[S]) per seed candidate slot, plus
+      ts int32[S, l_max] absorption timestamps when ``with_ts``.
     """
     interpret = resolve_interpret(interpret)
     s_pad = u.shape[0]
@@ -409,9 +465,17 @@ def fused_zone_scan_flat(
     per_block = lambda rows: pl.BlockSpec((rows, blk), lambda i: (0, i))
 
     kernel = functools.partial(
-        _fused_kernel, delta=delta, l_max=l_max, blk=blk,
+        _fused_kernel, delta=delta, l_max=l_max, blk=blk, with_ts=with_ts,
     )
-    code, length = pl.pallas_call(
+    out_specs = [per_block(limbs), per_block(1)]
+    out_shape = [
+        jax.ShapeDtypeStruct((limbs, s_pad), jnp.int32),
+        jax.ShapeDtypeStruct((1, s_pad), jnp.int32),
+    ]
+    if with_ts:
+        out_specs.append(per_block(l_max))
+        out_shape.append(jax.ShapeDtypeStruct((l_max, s_pad), jnp.int32))
+    outs = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
         in_specs=[
@@ -425,15 +489,12 @@ def fused_zone_scan_flat(
             per_block(1),                               # lane validity
             per_block(1),                               # lane zone ids
         ],
-        out_specs=[
-            per_block(limbs),
-            per_block(1),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((limbs, s_pad), jnp.int32),
-            jax.ShapeDtypeStruct((1, s_pad), jnp.int32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(hi2, u2, v2, t2, valid2, zid2, t2, valid2, zid2)
 
+    code, length = outs[0], outs[1]
+    if with_ts:
+        return code.T, length[0], outs[2].T
     return code.T, length[0]

@@ -3,7 +3,12 @@
 The manager owns the name -> :class:`MotifSession` mapping and nothing else:
 per-session concurrency lives on each session's lock, so tenants never
 contend with each other on the hot ingest/query paths — the manager lock is
-held only for registry mutations and listings.
+held only for registry mutations and listings.  Session *construction* is
+deliberately outside the lock: building a :class:`MotifSession` can resolve
+a backend, validate a config, and touch jit state, and one slow (or
+failing) tenant must not stall every other tenant's ``create``/``get``.
+The name is reserved under the lock first, so concurrent creates of the
+same name still race safely.
 """
 
 from __future__ import annotations
@@ -11,6 +16,12 @@ from __future__ import annotations
 import threading
 
 from .session import MotifSession
+
+#: Placeholder parked in the registry while a session is being constructed
+#: outside the manager lock.  Reserved names count toward ``max_sessions``
+#: and reject duplicate ``create`` calls, but are invisible to ``get`` /
+#: ``drop`` / ``names`` / ``stats`` until construction commits.
+_RESERVED = object()
 
 
 class SessionManager:
@@ -31,12 +42,22 @@ class SessionManager:
         self.session_defaults = dict(session_defaults)
         self._sessions: dict[str, MotifSession] = {}
         self._lock = threading.Lock()
+        # lazily-built fallback engine for comine() when tenants don't
+        # share a mining engine (config/kwargs-built sessions)
+        self._comine_engine = None
 
     def __len__(self) -> int:
-        return len(self._sessions)
+        with self._lock:
+            return len(self._sessions)
 
     def create(self, name: str, **params) -> MotifSession:
-        """Create a tenant session; defaults fill any unspecified params."""
+        """Create a tenant session; defaults fill any unspecified params.
+
+        The name is reserved under the manager lock, then the session is
+        constructed with the lock *released* — a slow or failing construct
+        never blocks other tenants.  On any construction failure the
+        reservation is rolled back, so the name is immediately reusable.
+        """
         merged = {**self.session_defaults, **params}
         with self._lock:
             if name in self._sessions:
@@ -46,33 +67,47 @@ class SessionManager:
                     f"session limit reached ({self.max_sessions}); "
                     f"drop a tenant before creating {name!r}"
                 )
+            self._sessions[name] = _RESERVED
+        try:
             session = MotifSession(name, **merged)
+        except BaseException:
+            with self._lock:
+                if self._sessions.get(name) is _RESERVED:
+                    del self._sessions[name]
+            raise
+        with self._lock:
             self._sessions[name] = session
-            return session
+        return session
 
     def get(self, name: str) -> MotifSession:
         with self._lock:
-            try:
-                return self._sessions[name]
-            except KeyError:
-                raise KeyError(f"unknown session {name!r}") from None
+            session = self._sessions.get(name)
+        if session is None or session is _RESERVED:
+            raise KeyError(f"unknown session {name!r}")
+        return session
 
     def drop(self, name: str) -> MotifSession:
         """Remove and return a session (its miner state stays usable)."""
         with self._lock:
-            try:
-                return self._sessions.pop(name)
-            except KeyError:
-                raise KeyError(f"unknown session {name!r}") from None
+            session = self._sessions.get(name)
+            if session is None or session is _RESERVED:
+                # a reservation is an in-flight create, not a droppable
+                # session — callers see it only once construction commits
+                raise KeyError(f"unknown session {name!r}")
+            del self._sessions[name]
+            return session
 
     def names(self) -> list[str]:
         with self._lock:
-            return sorted(self._sessions)
+            return sorted(n for n, s in self._sessions.items()
+                          if s is not _RESERVED)
+
+    def _snapshot(self) -> list[MotifSession]:
+        with self._lock:
+            return [s for s in self._sessions.values() if s is not _RESERVED]
 
     def stats(self) -> dict:
-        with self._lock:
-            sessions = list(self._sessions.values())
-        per_session = [s.stats() for s in sessions]
+        per_session = [s.stats() for s in self._snapshot()]
         return {
             "n_sessions": len(per_session),
             "max_sessions": self.max_sessions,
@@ -83,3 +118,38 @@ class SessionManager:
             "cache_misses": sum(s["cache"]["misses"] for s in per_session),
             "sessions": per_session,
         }
+
+    # -- cross-tenant co-mining ---------------------------------------------
+
+    def comine(self, graph, names: list[str] | None = None) -> dict:
+        """Mine one graph under every selected tenant's config, co-scheduled.
+
+        The tenants' :class:`~repro.core.config.MiningConfig`\\ s are handed
+        to ``PTMTEngine.discover_many``, which groups configs differing only
+        in ``delta``/``l_max``/``omega`` into lattices and runs ONE shared
+        Phase-1 sweep per lattice instead of one per tenant.  Counts are
+        identical to per-tenant ``engine.discover`` calls.
+
+        Returns ``{tenant_name: DiscoveryResult}``.  When every selected
+        session was built from the same shared engine (the standard
+        deployment), that engine runs the sweep — its compile caches stay
+        warm; otherwise a manager-level engine is built lazily from the
+        first tenant's config.
+        """
+        selected = self.names() if names is None else list(names)
+        sessions = [self.get(n) for n in selected]
+        if not sessions:
+            return {}
+        engines = {id(s.mining_engine): s.mining_engine
+                   for s in sessions if s.mining_engine is not None}
+        if len(engines) == 1:
+            engine = next(iter(engines.values()))
+        else:
+            with self._lock:
+                if self._comine_engine is None:
+                    from repro.core.engine import PTMTEngine
+
+                    self._comine_engine = PTMTEngine(sessions[0].config)
+                engine = self._comine_engine
+        results = engine.discover_many(graph, [s.config for s in sessions])
+        return dict(zip(selected, results))

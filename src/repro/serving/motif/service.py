@@ -129,6 +129,21 @@ class MotifService:
         """Drop a session's not-yet-admitted window (rejected-flush recovery)."""
         return self.manager.get(session).discard_pending()
 
+    # -- cross-tenant co-mining ---------------------------------------------
+
+    def comine(self, graph, sessions: list[str] | None = None) -> dict:
+        """Batch-mine one graph under every (or the named) tenants' configs.
+
+        Thin delegate to :meth:`SessionManager.comine`: tenant configs that
+        differ only in ``delta``/``l_max``/``omega`` share one Phase-1 sweep
+        via ``PTMTEngine.discover_many``.  Returns
+        ``{tenant_name: DiscoveryResult}`` with counts byte-identical to
+        per-tenant independent mining.
+        """
+        with self.obs.tracer.span("serve.comine",
+                                  tenants=len(sessions or self.sessions())):
+            return self.manager.comine(graph, sessions)
+
     # -- query --------------------------------------------------------------
 
     def query(self, request: QueryRequest) -> QueryResponse:

@@ -29,7 +29,7 @@ import threading
 import numpy as np
 
 from repro.core.config import MiningConfig
-from repro.core.streaming import StreamingMiner
+from repro.core.streaming import StreamingMiner, validate_edge_chunk
 from repro.obs import get_obs
 
 from .cache import EpochCache
@@ -135,12 +135,13 @@ class MotifSession:
     # -- ingest path --------------------------------------------------------
 
     def ingest(self, u, v, t) -> bool:
-        """Buffer one edge chunk; returns True if it triggered a flush."""
-        u = np.asarray(u, np.int32).ravel()
-        v = np.asarray(v, np.int32).ravel()
-        t = np.asarray(t, np.int64).ravel()
-        if not (u.shape == v.shape == t.shape):
-            raise ValueError("u, v, t must have identical shapes")
+        """Buffer one edge chunk; returns True if it triggered a flush.
+
+        Chunks are validated *before* buffering (integer dtypes, values in
+        int32/int64 range — see :func:`validate_edge_chunk`); a bad chunk
+        raises ``ValueError`` and leaves the admission window untouched.
+        """
+        u, v, t = validate_edge_chunk(u, v, t)
         with self.lock:
             if t.size:
                 self._pend_u.append(u)

@@ -1,0 +1,373 @@
+"""Config-lattice co-mining differential + executor stats-threading tests.
+
+Tentpole contract: ``engine.discover_many([cfg...])`` groups configs that
+differ only in ``delta``/``l_max``/``omega`` into one lattice, runs ONE
+Phase-1 expansion at the dominating ``(max delta, max l_max, max omega)``,
+and splits per-config count tables during the Phase-2 fold by
+prefix-truncating candidates on per-edge absorption timestamps.  Every test
+here asserts the co-mined counts are *identical* to independent
+``engine.discover`` runs — losslessness is the whole point.
+
+Rider contracts: per-call run stats travel on the :class:`RunOutcome`
+returned by ``run_layout``/``run_fused`` (the shared-executor
+cross-attribution race), ingestion validates edge chunks before buffering
+(silent int32 wrap / float truncation), and ``SessionManager.create``
+builds sessions outside the manager-wide lock.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from conftest import random_graph
+from repro.core import MiningExecutor, transitions, tzp
+from repro.core.config import MiningConfig
+from repro.core.engine import PTMTEngine
+from repro.core import planner
+from repro.core.streaming import StreamingMiner, validate_edge_chunk
+
+BACKENDS = ("ref", "numpy", "pallas")
+
+
+def _dict(counts):
+    return transitions.device_counts_to_dict(counts)
+
+
+def _graph(seed=3, n=500, nodes=35, span=2500):
+    return random_graph(seed, n, nodes, span)
+
+
+def _bursty(seed, n=220, nodes=9):
+    """Power-law burst sizes + quiet gaps: zone sizes span several
+    power-of-two buckets, so dense and bucketed layouts disagree on
+    bucket count (what the threading test needs to tell runs apart)."""
+    from repro.core.temporal_graph import from_edges
+
+    rng = np.random.default_rng(seed)
+    us, vs, ts = [], [], []
+    now = 0
+    while len(ts) < n:
+        burst = min(int(rng.pareto(0.9) * 3) + 1, 70)
+        group = rng.integers(0, nodes, size=max(2, burst // 4 + 2))
+        for _ in range(burst):
+            a, b = rng.choice(group, 2, replace=True)
+            us.append(a)
+            vs.append(b)
+            ts.append(now + int(rng.integers(0, 30)))
+        now += int(rng.integers(150, 700))
+    return from_edges(np.asarray(us[:n]), np.asarray(vs[:n]),
+                      np.asarray(ts[:n]))
+
+
+def _lattice_configs(backend, **extra):
+    """A 4-member lattice: dominating member + strict delta/l_max/omega
+    sub-configs (one varying each axis)."""
+    base = MiningConfig(delta=50, l_max=4, omega=3, backend=backend, **extra)
+    return [
+        base,
+        base.with_updates(delta=20, l_max=3),
+        base.with_updates(delta=35, l_max=2, omega=2),
+        base.with_updates(delta=50, l_max=4, omega=4),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Lattice construction.
+# ---------------------------------------------------------------------------
+
+
+def test_lattice_groups_compatible_configs():
+    cfgs = _lattice_configs("ref")
+    lattices = planner.build_config_lattices(cfgs)
+    assert len(lattices) == 1
+    lat = lattices[0]
+    assert lat.n_configs == 4
+    assert lat.indices == (0, 1, 2, 3)
+    assert lat.members == tuple(cfgs)
+    # dominating = elementwise max over the free axes, other fields shared
+    assert (lat.dominating.delta, lat.dominating.l_max,
+            lat.dominating.omega) == (50, 4, 4)
+    assert lat.dominating.backend == "ref"
+    assert lat.params == ((50, 4), (20, 3), (35, 2), (50, 4))
+
+
+def test_lattice_splits_on_non_free_fields():
+    """Anything but delta/l_max/omega is a lattice boundary."""
+    a = MiningConfig(delta=50, l_max=4, backend="ref")
+    b = a.with_updates(delta=20)                    # same lattice as a
+    c = a.with_updates(backend="numpy")             # different backend
+    d = a.with_updates(zone_chunk=4)                # different scheduling
+    lattices = planner.build_config_lattices([a, c, b, d])
+    assert [lat.indices for lat in lattices] == [(0, 2), (1,), (3,)]
+
+
+def test_dominating_config_is_elementwise_max():
+    cfgs = _lattice_configs("ref")
+    dom = planner.dominating_config(cfgs)
+    assert (dom.delta, dom.l_max, dom.omega) == (50, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Differential: co-mined == independent, across backends and layouts.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("layout", ["dense", "bucketed"])
+def test_discover_many_matches_independent(backend, layout):
+    g = _graph()
+    cfgs = _lattice_configs(backend, zone_layout=layout)
+    eng = PTMTEngine(cfgs[0])
+    results = eng.discover_many(g, cfgs)
+    assert len(results) == 4
+    for cfg, res in zip(cfgs, results):
+        solo = PTMTEngine(cfg).discover(g)
+        assert res.counts == solo.counts, \
+            f"{backend}/{layout} lattice member {cfg.delta}/{cfg.l_max} " \
+            f"diverged from independent discover"
+    exec_stats = results[0].layout["execution"]
+    assert exec_stats["n_configs"] == 4
+    assert exec_stats["path"] in ("per-bucket-multi", "fused-multi")
+    assert eng.stats.discover_many_calls == 1
+    assert eng.stats.comined_configs == 4
+
+
+def test_discover_many_shares_one_sweep():
+    """One lattice = one Phase-1 expansion: the engine's launch counter
+    after a 4-config co-mine equals a single dominating discover's, not
+    4x it."""
+    g = _graph()
+    cfgs = _lattice_configs("ref")
+    solo = PTMTEngine(planner.dominating_config(cfgs))
+    solo.discover(g)
+    eng = PTMTEngine(cfgs[0])
+    eng.discover_many(g, cfgs)
+    assert eng.stats.launches == solo.stats.launches
+
+
+def test_discover_many_fused_single_launch():
+    g = _graph(seed=7)
+    cfgs = _lattice_configs("pallas", zone_layout="bucketed", fused="on")
+    eng = PTMTEngine(cfgs[0])
+    results = eng.discover_many(g, cfgs)
+    exec_stats = results[0].layout["execution"]
+    assert exec_stats["path"] == "fused-multi"
+    assert exec_stats["launches"] == 1
+    for cfg, res in zip(cfgs, results):
+        assert res.counts == PTMTEngine(cfg).discover(g).counts
+
+
+def test_discover_many_mixed_lattices_and_order():
+    """Incompatible configs split into lattices but results come back in
+    input order, each still equal to its independent run."""
+    g = _graph(seed=9, n=300)
+    a = MiningConfig(delta=40, l_max=3, backend="ref")
+    cfgs = [a, a.with_updates(backend="numpy"), a.with_updates(delta=15),
+            a.with_updates(backend="numpy", l_max=2)]
+    eng = PTMTEngine(a)
+    results = eng.discover_many(g, cfgs)
+    for cfg, res in zip(cfgs, results):
+        assert res.counts == PTMTEngine(cfg).discover(g).counts
+        assert (res.delta, res.l_max) == (cfg.delta, cfg.l_max)
+
+
+def test_discover_many_survives_tiny_merge_cap_retry():
+    """Per-config bounded-carry spill: only spilled members' caps double,
+    and the retry converges to exact counts."""
+    g = _graph(seed=11)
+    base = MiningConfig(delta=50, l_max=4, backend="ref", merge_cap=8,
+                        zone_chunk=4)
+    cfgs = [base, base.with_updates(delta=20, l_max=3),
+            base.with_updates(delta=50, l_max=2)]
+    eng = PTMTEngine(base)
+    with pytest.warns(RuntimeWarning, match="co-mine.*spilled"):
+        results = eng.discover_many(g, cfgs)
+    assert results[0].layout["execution"]["spill_retries"] >= 1
+    for cfg, res in zip(cfgs, results):
+        solo = PTMTEngine(cfg.with_updates(merge_cap=None,
+                                           zone_chunk=None)).discover(g)
+        assert res.counts == solo.counts
+
+
+def test_discover_many_empty_and_single():
+    g = _graph(seed=2, n=120)
+    cfg = MiningConfig(delta=40, l_max=3, backend="ref")
+    eng = PTMTEngine(cfg)
+    assert eng.discover_many(g, []) == []
+    [res] = eng.discover_many(g, [cfg])
+    assert res.counts == PTMTEngine(cfg).discover(g).counts
+
+
+# ---------------------------------------------------------------------------
+# Run-stats threading contract (the shared-executor race, satellite 1).
+# ---------------------------------------------------------------------------
+
+
+def test_run_stats_travel_with_outcome_under_concurrency():
+    """Two threads mining different layouts through ONE executor must each
+    see their own launch/path stats — the old ``last_run_stats`` attribute
+    cross-attributed whichever run finished last."""
+    g = _bursty(seed=5)
+    cfg = MiningConfig(delta=12, l_max=3, omega=2, backend="ref")
+    plan = tzp.plan_zones(g, delta=12, l_max=3, omega=2)
+    lay_dense = tzp.build_zone_layout(g, plan, layout="dense")
+    lay_buck = tzp.build_zone_layout(g, plan, layout="bucketed")
+    assert lay_buck.n_buckets > lay_dense.n_buckets
+    ex = MiningExecutor.from_config(cfg)
+    # warm both executables so the threaded phase measures dispatch only
+    expect = {
+        id(lay_dense): (_dict(ex.run_layout(lay_dense).counts),
+                        lay_dense.n_buckets),
+        id(lay_buck): (_dict(ex.run_layout(lay_buck).counts),
+                       lay_buck.n_buckets),
+    }
+    barrier = threading.Barrier(2)
+    errors = []
+
+    def worker(lay):
+        want_counts, want_launches = expect[id(lay)]
+        barrier.wait()
+        for _ in range(8):
+            out = ex.run_layout(lay)
+            if out.stats["launches"] != want_launches:
+                errors.append(
+                    f"launches {out.stats['launches']} != {want_launches}")
+            if _dict(out.counts) != want_counts:
+                errors.append("counts cross-attributed")
+    threads = [threading.Thread(target=worker, args=(lay,))
+               for lay in (lay_dense, lay_buck)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors[:4]
+
+
+def test_last_run_stats_deprecated_alias():
+    g = _graph(seed=2, n=150)
+    cfg = MiningConfig(delta=40, l_max=3, backend="ref")
+    plan = tzp.plan_zones(g, delta=40, l_max=3, omega=cfg.omega)
+    lay = tzp.build_zone_layout(g, plan, layout="dense")
+    ex = MiningExecutor.from_config(cfg)
+    out = ex.run_layout(lay)
+    with pytest.warns(DeprecationWarning, match="last_run_stats"):
+        legacy = ex.last_run_stats
+    assert legacy == out.stats
+
+
+# ---------------------------------------------------------------------------
+# Ingest validation (satellite 2).
+# ---------------------------------------------------------------------------
+
+
+def test_validate_edge_chunk_rejects_floats_and_overflow():
+    with pytest.raises(ValueError, match="integer-typed"):
+        validate_edge_chunk([1], [2], [3.5])
+    with pytest.raises(ValueError, match="int32 range"):
+        validate_edge_chunk([2**31], [2], [3])
+    with pytest.raises(ValueError, match="int32 range"):
+        validate_edge_chunk([1], [-2**31 - 1], [3])
+    u, v, t = validate_edge_chunk(
+        np.array([1], np.int64), np.array([2], np.uint8), [3])
+    assert (u.dtype, v.dtype, t.dtype) == (np.int32, np.int32, np.int64)
+
+
+def test_streaming_miner_ingest_validates_before_buffering():
+    miner = StreamingMiner(delta=40, l_max=3)
+    with pytest.raises(ValueError, match="would silently wrap"):
+        miner.ingest([2**31], [1], [10])
+    with pytest.raises(ValueError, match="integer-typed"):
+        miner.ingest([1], [2], np.array([10.0]))
+    assert miner.n_edges_ingested == 0          # nothing buffered
+    miner.ingest([1], [2], [10])                # valid chunk still works
+    assert miner.n_edges_ingested == 1
+
+
+def test_session_ingest_validates_before_buffering():
+    from repro.serving.motif.session import MotifSession
+
+    sess = MotifSession("t0", delta=40, l_max=3)
+    with pytest.raises(ValueError, match="would silently wrap"):
+        sess.ingest([2**31], [1], [10])
+    with pytest.raises(ValueError, match="integer-typed"):
+        sess.ingest([1], [2], [10.5])
+    assert sess.pending_edges == 0
+    sess.ingest([1], [2], [10])
+    assert sess.pending_edges == 1
+
+
+# ---------------------------------------------------------------------------
+# Manager create outside the lock (satellite 3) + serving comine.
+# ---------------------------------------------------------------------------
+
+
+def test_manager_create_rolls_back_reservation_on_failure():
+    from repro.serving.motif.manager import SessionManager
+
+    mgr = SessionManager()
+    with pytest.raises(Exception):
+        mgr.create("bad", delta=-5, l_max=3)     # config validation fails
+    assert "bad" not in mgr.names()
+    assert len(mgr) == 0
+    mgr.create("bad", delta=40, l_max=3)         # name immediately reusable
+    assert mgr.names() == ["bad"]
+
+
+def test_manager_create_does_not_hold_lock_during_construction(monkeypatch):
+    """While one create is constructing, the registry stays responsive:
+    get/names work, the in-flight name is invisible, and a duplicate
+    create of the same name is rejected by the reservation."""
+    from repro.serving.motif import manager as manager_mod
+
+    mgr = manager_mod.SessionManager()
+    mgr.create("ready", delta=40, l_max=3)
+    real_session = manager_mod.MotifSession
+    started, release = threading.Event(), threading.Event()
+
+    class SlowSession(real_session):
+        def __init__(self, name, **kw):
+            if name == "slow":
+                started.set()
+                assert release.wait(5.0)
+            super().__init__(name, **kw)
+
+    monkeypatch.setattr(manager_mod, "MotifSession", SlowSession)
+    worker = threading.Thread(
+        target=mgr.create, args=("slow",), kwargs=dict(delta=40, l_max=3))
+    worker.start()
+    try:
+        assert started.wait(5.0)
+        # construction in flight: the manager lock is free ...
+        assert mgr.names() == ["ready"]          # reservation invisible
+        assert mgr.get("ready").name == "ready"
+        with pytest.raises(KeyError):
+            mgr.get("slow")                      # not yet committed
+        with pytest.raises(ValueError, match="already exists"):
+            mgr.create("slow", delta=40, l_max=3)   # but name is reserved
+        assert len(mgr) == 2                     # reservation counts
+    finally:
+        release.set()
+        worker.join(10.0)
+    assert sorted(mgr.names()) == ["ready", "slow"]
+
+
+def test_service_comine_matches_independent_discover():
+    from repro.serving.motif.service import MotifService
+
+    g = _graph(seed=13, n=300)
+    base = MiningConfig(delta=50, l_max=4, backend="ref")
+    svc = MotifService(engine=PTMTEngine(base))
+    svc.create_session("a")
+    svc.create_session("b", delta=20, l_max=3)
+    svc.create_session("c", delta=35, l_max=2)
+    results = svc.comine(g)
+    assert sorted(results) == ["a", "b", "c"]
+    for name, cfg in (("a", base),
+                      ("b", base.with_updates(delta=20, l_max=3)),
+                      ("c", base.with_updates(delta=35, l_max=2))):
+        assert results[name].counts == PTMTEngine(cfg).discover(g).counts
+    # subset selection routes through the same shared sweep
+    sub = svc.comine(g, ["b", "c"])
+    assert sorted(sub) == ["b", "c"]
+    assert sub["b"].counts == results["b"].counts

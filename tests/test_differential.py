@@ -195,7 +195,7 @@ def _layout_counts(g, *, backend, layout, zone_chunk, delta, l_max, omega,
     lay = tzp.build_zone_layout(g, plan, layout=layout, e_cap=e_cap)
     ex = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
                         zone_chunk=zone_chunk, agg=agg)
-    return lay, _dict(ex.run_layout(lay, allow_overflow=True))
+    return lay, _dict(ex.run_layout(lay, allow_overflow=True).counts)
 
 
 def test_bursty_corpus_spans_three_buckets():
@@ -241,9 +241,9 @@ def test_layout_survives_tiny_merge_cap_retry(layout):
     tiny = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2,
                           agg="hierarchical", merge_cap=8)
     with pytest.warns(RuntimeWarning, match="merge spilled"):
-        got = _dict(tiny.run_layout(lay))
+        got = _dict(tiny.run_layout(lay).counts)
     assert got == _dict(base.run_layout(
-        tzp.build_zone_layout(g, plan, layout="dense")))
+        tzp.build_zone_layout(g, plan, layout="dense")).counts)
 
 
 def test_layout_overflow_names_offending_bucket():
@@ -258,12 +258,12 @@ def test_layout_overflow_names_offending_bucket():
     with pytest.raises(ZoneOverflowError, match=r"bucket.*cap16"):
         ex.run_layout(lay)
     with pytest.warns(RuntimeWarning, match="dropped"):
-        got = ex.run_layout(lay, allow_overflow=True)
+        got = ex.run_layout(lay, allow_overflow=True).counts
     # overflow is layout-invariant: the dense batch drops the same edges
     dense = tzp.build_zone_layout(g, plan, layout="dense", e_cap=16)
     assert dense.overflow == lay.overflow
     with pytest.warns(RuntimeWarning, match="dropped"):
-        dense_got = ex.run_layout(dense, allow_overflow=True)
+        dense_got = ex.run_layout(dense, allow_overflow=True).counts
     assert _dict(got) == _dict(dense_got)
 
 
@@ -285,12 +285,14 @@ def test_fused_matches_per_bucket_and_oracle(layout):
     if layout == "bucketed":
         assert lay.n_buckets >= 3, lay.bucket_shapes()
     ex = MiningExecutor(delta=delta, l_max=l_max, backend="pallas")
-    fused = _dict(ex.run_layout(lay, fused=True))
-    assert ex.last_run_stats["path"] == "fused"
-    assert ex.last_run_stats["launches"] == 1
-    per_bucket = _dict(ex.run_layout(lay, fused=False))
-    assert ex.last_run_stats["path"] == "per-bucket"
-    assert ex.last_run_stats["launches"] == lay.n_buckets
+    fused_out = ex.run_layout(lay, fused=True)
+    fused = _dict(fused_out.counts)
+    assert fused_out.stats["path"] == "fused"
+    assert fused_out.stats["launches"] == 1
+    pb_out = ex.run_layout(lay, fused=False)
+    per_bucket = _dict(pb_out.counts)
+    assert pb_out.stats["path"] == "per-bucket"
+    assert pb_out.stats["launches"] == lay.n_buckets
     assert fused == per_bucket, "fused != per-bucket"
     expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
     assert fused == expect, "fused != oracle"
@@ -307,10 +309,11 @@ def test_fused_survives_tiny_merge_cap_retry():
     tiny = MiningExecutor(delta=delta, l_max=l_max, backend="pallas",
                           merge_cap=8)
     with pytest.warns(RuntimeWarning, match="fused on-device merge spilled"):
-        got = _dict(tiny.run_layout(lay, fused=True))
-    assert tiny.last_run_stats["spill_retries"] >= 1
-    assert tiny.last_run_stats["launches"] == 1
-    assert got == _dict(base.run_layout(lay, fused=True))
+        outcome = tiny.run_layout(lay, fused=True)
+    got = _dict(outcome.counts)
+    assert outcome.stats["spill_retries"] >= 1
+    assert outcome.stats["launches"] == 1
+    assert got == _dict(base.run_layout(lay, fused=True).counts)
 
 
 def test_fused_dispatch_policy():
@@ -393,8 +396,8 @@ def test_pad_policy_with_bucketed_layout_non_divisor_chunk(backend):
                           zone_chunk=0)
     padded = MiningExecutor(delta=delta, l_max=l_max, backend=backend,
                             zone_chunk=chunk, pad_policy="pad")
-    got = _dict(padded.run_layout(lay, fused=False))
-    assert got == _dict(base.run_layout(lay, fused=False))
+    got = _dict(padded.run_layout(lay, fused=False).counts)
+    assert got == _dict(base.run_layout(lay, fused=False).counts)
     from repro.core.executor import ZoneChunkError
 
     strict = MiningExecutor(delta=delta, l_max=l_max, backend=backend,

@@ -112,7 +112,7 @@ def test_all_empty_plan_builds_inert_bucket():
     plan = tzp.plan_zones(g, delta=5, l_max=2)
     lay = tzp.build_zone_layout(g, plan, layout="bucketed")
     ex = MiningExecutor(delta=5, l_max=2)
-    assert transitions.device_counts_to_dict(ex.run_layout(lay)) == {}
+    assert transitions.device_counts_to_dict(ex.run_layout(lay).counts) == {}
 
 
 def test_resolve_layout_rules():
