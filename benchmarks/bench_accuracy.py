@@ -7,7 +7,7 @@ Prints per-dataset match statistics.
 
 from __future__ import annotations
 
-from repro.core import discover, discover_sequential
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 from .common import csv_row, timed
@@ -27,9 +27,12 @@ def run() -> list[str]:
             from repro.core import from_edges
 
             g = from_edges(g.u[:cap], g.v[:cap], g.t[:cap])
-        res, t_par = timed(
-            discover, g, delta=delta, l_max=l_max, omega=omega)
-        seq, _ = timed(discover_sequential, g, delta=delta, l_max=l_max)
+        engine = PTMTEngine(MiningConfig(
+            delta=delta, l_max=l_max, omega=omega))
+        res, t_par = timed(engine.discover, g)
+        seq_engine = PTMTEngine(MiningConfig(
+            delta=delta, l_max=l_max, zone_chunk=0))
+        seq, _ = timed(seq_engine.sequential, g)
         keys = set(res.counts) | set(seq.counts)
         mism = sum(
             res.counts.get(k, 0) != seq.counts.get(k, 0) for k in keys)

@@ -7,7 +7,7 @@ chain extension / reciprocal shares of the 0101 family).
 
 from __future__ import annotations
 
-from repro.core import discover
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 from .common import csv_row, timed
@@ -16,7 +16,8 @@ from .common import csv_row, timed
 def run() -> list[str]:
     rows = []
     g = sg.make("wikitalk-like")
-    res, t = timed(discover, g, delta=600, l_max=3, omega=8)
+    engine = PTMTEngine(MiningConfig(delta=600, l_max=3, omega=8))
+    res, t = timed(engine.discover, g)
     tree = res.tree()
 
     total = res.total_processes()

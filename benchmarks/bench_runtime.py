@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import discover, discover_sequential
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 from .common import csv_row, timed
@@ -24,10 +24,12 @@ def run() -> list[str]:
     for n in sizes:
         g = sg.bursty_stream(n, max(n // 40, 10), seed=1)
         delta, l_max, omega = 90, 5, 8
-        par, t_par = timed(discover, g, delta=delta, l_max=l_max,
-                           omega=omega, repeats=2, warmup=1)
-        seq, t_seq = timed(discover_sequential, g, delta=delta,
-                           l_max=l_max, repeats=1, warmup=1)
+        engine = PTMTEngine(MiningConfig(
+            delta=delta, l_max=l_max, omega=omega))
+        par, t_par = timed(engine.discover, g, repeats=2, warmup=1)
+        seq_engine = PTMTEngine(MiningConfig(
+            delta=delta, l_max=l_max, zone_chunk=0))
+        seq, t_seq = timed(seq_engine.sequential, g, repeats=1, warmup=1)
         assert par.counts == seq.counts
         speedups.append(t_seq / t_par)
         rows.append(csv_row(

@@ -22,14 +22,15 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={ndev}"
 import json, time
 import jax
-from repro.core import discover
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 g = sg.bursty_stream(20_000, 400, seed=3)
 mesh = jax.make_mesh(({ndev},), ("zones",))
 t0 = time.perf_counter()
-res = discover(g, delta=90, l_max=5, omega=8, mesh=mesh,
-               zone_axes=("zones",), zone_chunk=2)
+engine = PTMTEngine(MiningConfig(delta=90, l_max=5, omega=8,
+                                zone_chunk=2))
+res = engine.sharded(g, mesh, ("zones",))
 dt = time.perf_counter() - t0
 print(json.dumps({{"n_types": len(res.counts),
                    "total": res.total_processes(),

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import discover, discover_sequential
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 from .common import csv_row, timed
@@ -28,10 +28,12 @@ def run() -> list[str]:
     deltas = [15, 30, 60, 120]
     t_par, t_seq = [], []
     for delta in deltas:
-        _, tp = timed(discover, g, delta=delta, l_max=4, omega=6,
-                      repeats=1, warmup=1)
-        _, ts = timed(discover_sequential, g, delta=delta, l_max=4,
-                      repeats=1, warmup=1)
+        _, tp = timed(PTMTEngine(MiningConfig(
+            delta=delta, l_max=4, omega=6)).discover, g,
+            repeats=1, warmup=1)
+        _, ts = timed(PTMTEngine(MiningConfig(
+            delta=delta, l_max=4, zone_chunk=0)).sequential, g,
+            repeats=1, warmup=1)
         t_par.append(tp)
         t_seq.append(ts)
         rows.append(csv_row(
@@ -46,8 +48,9 @@ def run() -> list[str]:
     lmaxes = [2, 4, 6, 8]
     t_par2 = []
     for l_max in lmaxes:
-        _, tp = timed(discover, g, delta=60, l_max=l_max, omega=5,
-                      repeats=1, warmup=1)
+        _, tp = timed(PTMTEngine(MiningConfig(
+            delta=60, l_max=l_max, omega=5)).discover, g,
+            repeats=1, warmup=1)
         t_par2.append(tp)
         rows.append(csv_row(f"fig10_lmax/l_max={l_max}", tp, ""))
     rows.append(csv_row(

@@ -200,22 +200,184 @@ def _serving_section(smoke: bool):
     return rows, payload
 
 
+def _drive(coordinator, streams, names, offsets, *, until, chunk,
+           queries_per_chunk, rng, checkpoint_every):
+    """Feed each tenant up to index ``until`` with the query mix running.
+
+    Returns ingest/query latency lists and updated offsets; periodic
+    checkpoints carry the post-chunk offset (the failover rewind point).
+    """
+    from repro.serving.motif import QueryRequest
+
+    ingest_lat, query_lat = [], []
+    since = {n: 0 for n in names}
+    live = True
+    while live:
+        live = False
+        for name, g in zip(names, streams):
+            i = offsets[name]
+            end = min(until, g.n_edges)
+            if i >= end:
+                continue
+            live = True
+            j = min(i + chunk, end)
+            t0 = time.perf_counter()
+            while True:
+                ack = coordinator.ingest(name, g.u[i:j], g.v[i:j], g.t[i:j])
+                if not ack.throttled:
+                    break
+                coordinator.flush(name)
+            ingest_lat.append(time.perf_counter() - t0)
+            offsets[name] = j
+            since[name] += j - i
+            if since[name] >= checkpoint_every:
+                coordinator.checkpoint(name, {"offset": j})
+                since[name] = 0
+            for _ in range(queries_per_chunk):
+                level = int(rng.integers(1, 4))
+                t0 = time.perf_counter()
+                resp = coordinator.query(QueryRequest(
+                    session=name, op="top_k", level=level, k=8))
+                if not resp.first_call:
+                    query_lat.append(time.perf_counter() - t0)
+    return ingest_lat, query_lat
+
+
+def _slo(ingest_lat, query_lat, edges, wall):
+    from repro.obs.timing import percentile_ms
+
+    return {
+        "edges": edges,
+        "seconds": wall,
+        "ingest_edges_per_s": edges / wall if wall else 0.0,
+        "ingest_p50_ms": percentile_ms(ingest_lat, 50),
+        "ingest_p99_ms": percentile_ms(ingest_lat, 99),
+        "queries": len(query_lat),
+        "query_p50_ms": percentile_ms(query_lat, 50),
+        "query_p99_ms": percentile_ms(query_lat, 99),
+    }
+
+
+def _failover_section(smoke: bool):
+    """Ingest SLO + query tail latency across a worker kill + failover.
+
+    Phase 1 (healthy): feed half the stream through a 3-worker cluster
+    with periodic checkpoints.  Then kill a tenant-owning worker —
+    failover restores its tenants' checkpoints on the rendezvous
+    runner-up and hands back their durable offsets.  Phase 2 (degraded):
+    rewind those tenants and finish the stream on the survivors.  Final
+    counts must be byte-identical to an uninterrupted single-process
+    replay — the availability layer's core guarantee — and CI asserts
+    the flag plus the presence of both phases' p50/p99.
+    """
+    import tempfile
+
+    from repro.core.config import MiningConfig
+    from repro.launch.serve_motifs import reference_counts, tenant_counts
+    from repro.serving.cluster import ClusterCoordinator
+
+    n_edges = 1_200 if smoke else 6_000
+    tenants = 3
+    chunk = 96 if smoke else 256
+    ingest_batch = 192 if smoke else 512
+    ckpt_every = 2 * chunk
+
+    cfg = MiningConfig(delta=DELTA, l_max=L_MAX, omega=OMEGA, backend="ref")
+    g = _make_stream(n_edges, seed=23)
+    from repro.launch.serve_motifs import tenant_streams
+
+    streams = tenant_streams(g, tenants)
+    names = [f"tenant{i}" for i in range(tenants)]
+    rng = np.random.default_rng(5)
+
+    with tempfile.TemporaryDirectory() as ckdir:
+        co = ClusterCoordinator(3, config=cfg, checkpoint_dir=ckdir,
+                                ingest_batch=ingest_batch)
+        for name in names:
+            co.create_tenant(name)
+            co.checkpoint(name, {"offset": 0})
+        offsets = {n: 0 for n in names}
+        half = max(s.n_edges for s in streams) // 2
+
+        t0 = time.perf_counter()
+        h_ingest, h_query = _drive(
+            co, streams, names, offsets, until=half, chunk=chunk,
+            queries_per_chunk=2, rng=rng, checkpoint_every=ckpt_every)
+        healthy_wall = time.perf_counter() - t0
+        healthy = _slo(h_ingest, h_query,
+                       sum(offsets.values()), healthy_wall)
+
+        # kill a worker that owns at least one tenant; failover restores
+        # its tenants elsewhere and returns their durable offsets
+        victim = co.owner_of(names[0])
+        t0 = time.perf_counter()
+        recovered = co.kill_worker(victim)
+        failover_s = time.perf_counter() - t0
+        for name, meta in recovered.items():
+            offsets[name] = int(meta["offset"])
+        fed_before = sum(offsets.values())
+
+        t0 = time.perf_counter()
+        f_ingest, f_query = _drive(
+            co, streams, names, offsets,
+            until=max(s.n_edges for s in streams), chunk=chunk,
+            queries_per_chunk=2, rng=rng, checkpoint_every=ckpt_every)
+        degraded_wall = time.perf_counter() - t0
+        degraded = _slo(f_ingest, f_query,
+                        sum(offsets.values()) - fed_before, degraded_wall)
+        co.flush_all()
+
+        ref = reference_counts(cfg, streams, names,
+                               ingest_batch=ingest_batch)
+        equal = all(tenant_counts(co, n) == ref[n] for n in names)
+
+    payload = {
+        "workers": 3,
+        "tenants": tenants,
+        "edges": g.n_edges,
+        "killed_worker": victim,
+        "tenants_failed_over": sorted(recovered),
+        "replayed_edges": sum(
+            offsets[n] - int(recovered[n]["offset"]) for n in recovered),
+        "failover_seconds": failover_s,
+        "healthy": healthy,
+        "failover": degraded,
+        "counts_equal": equal,
+    }
+    row = csv_row(
+        f"serving/failover_w3_t{tenants}", failover_s,
+        f"healthy_q_p99_ms={healthy['query_p99_ms']:.2f};"
+        f"degraded_q_p99_ms={degraded['query_p99_ms']:.2f};"
+        f"failed_over={len(recovered)};"
+        f"equal={'yes' if equal else 'NO'}",
+    )
+    assert equal, "failover counts diverged from uninterrupted replay"
+    return row, payload
+
+
 def run(smoke: bool = False) -> list[str]:
     rows, _ = run_json(smoke=smoke)
     return rows
 
 
 def run_json(smoke: bool = False):
-    """Rows + the structured payload ``--out-json`` lands in BENCH JSON."""
+    """Rows + the structured payload ``--out-json`` lands in BENCH JSON.
+
+    Written standalone to ``BENCH_serving.json`` (via ``benchmarks/run.py
+    --only serving --out-json BENCH_serving.json``) — serving SLOs no
+    longer ride in ``BENCH_mining.json``.
+    """
     rows, workload = _serving_section(smoke)
     comine_row, comine = _comine_section(smoke)
+    failover_row, failover = _failover_section(smoke)
     payload = {
         "suite": "serving",
         "smoke": smoke,
         "workload": workload,
         "comine": comine,
+        "failover": failover,
     }
-    return rows + [comine_row], payload
+    return rows + [comine_row, failover_row], payload
 
 
 if __name__ == "__main__":

@@ -10,7 +10,8 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core import from_edges, oracle, tzp
-from repro.core.api import discover_sequential
+from repro.core.config import MiningConfig
+from repro.core.engine import PTMTEngine
 
 from .common import csv_row, timed
 
@@ -61,7 +62,8 @@ def run() -> list[str]:
     ))
     assert mismatches == 0
     # also confirm the device pipeline agrees with the oracle audit
-    seq = discover_sequential(g, delta=delta, l_max=l_max)
+    seq = PTMTEngine(MiningConfig(
+        delta=delta, l_max=l_max, zone_chunk=0)).sequential(g)
     assert seq.counts == truth
     rows.append(csv_row("table4_tzp/pipeline_vs_oracle", 0.0, "exact=yes"))
     return rows

@@ -8,9 +8,7 @@ sequential TMC-analog baseline, and prints the motif transition tree
 (paper Fig. 6).
 """
 
-import warnings
-
-from repro.core import MiningConfig, PTMTEngine, discover
+from repro.core import MiningConfig, PTMTEngine
 from repro.data.synthetic_graphs import triadic_stream
 
 # a triadic-closure-heavy interaction stream (paper's WikiTalk case study)
@@ -44,13 +42,6 @@ for b in lay["buckets"]:
 seq = engine.sequential(graph)
 assert seq.counts == result.counts, "partitioned counts must be exact!"
 print("exactness check vs sequential baseline: PASS")
-
-# --- the deprecated kwargs API still works (one-shot engine under the hood)
-with warnings.catch_warnings():
-    warnings.simplefilter("ignore", DeprecationWarning)
-    legacy = discover(graph, delta=120, l_max=4, omega=8)
-assert legacy.counts == result.counts
-print("legacy discover() shim agrees: PASS")
 
 # --- the motif transition tree (paper Fig. 6 / Table 6) --------------------
 tree = result.tree()

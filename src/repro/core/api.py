@@ -1,34 +1,31 @@
-"""Public PTMT API — result rendering + deprecated one-shot shims.
+"""Public PTMT API — result rendering.
 
 The parameter surface lives in :class:`repro.core.config.MiningConfig` and
-the lifecycle in :class:`repro.core.engine.PTMTEngine`; new code should
-use them directly::
+the lifecycle in :class:`repro.core.engine.PTMTEngine`; use them directly::
 
     engine = PTMTEngine(MiningConfig(delta=600, l_max=6))
     result = engine.discover(graph)          # warm calls reuse executables
     baseline = engine.sequential(graph)
 
-``discover`` / ``discover_sequential`` below are kept as thin back-compat
-shims: each constructs a one-shot engine from its kwargs and emits a
-``DeprecationWarning``.  Both return a :class:`DiscoveryResult` whose
-counts are *exact* (validated against the brute-force oracle and each
-other in tests — the paper's Fig. 7).
+The old one-shot ``discover`` / ``discover_sequential`` kwargs functions
+went through a deprecation cycle and are now **removed**; the names remain
+importable but raise immediately with a pointer at the engine API, so a
+stale call site fails with instructions instead of an ``ImportError``
+three frames away.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import warnings
-
-import jax
 
 from . import transitions
 
-_DEPRECATION = (
-    "repro.core.{name}(...) is deprecated; build a PTMTEngine from a "
-    "MiningConfig (repro.core.engine / repro.core.config) and call "
-    "engine.{method}(graph) — the engine reuses compiled executables "
-    "across calls"
+_REMOVED = (
+    "repro.core.{name}(...) was removed after its deprecation cycle; "
+    "build a PTMTEngine from a MiningConfig — "
+    "PTMTEngine(MiningConfig(delta=..., l_max=...)).{method}(graph) — "
+    "which reuses compiled executables across calls.  Mesh-sharded "
+    "mining is engine.sharded(graph, mesh, axes)."
 )
 
 
@@ -65,61 +62,12 @@ def counts_to_result(counts, *, n_zones, e_cap, overflow, delta,
     )
 
 
-def discover(
-    graph,
-    *,
-    delta: int,
-    l_max: int,
-    omega: int = 20,
-    e_cap: int | None = None,
-    backend: str = "ref",
-    zone_chunk: int | None = None,
-    agg: str = "auto",
-    merge_cap: int | None = None,
-    memory_budget_mb: float | None = None,
-    allow_overflow: bool = False,
-    mesh: jax.sharding.Mesh | None = None,
-    zone_axes: tuple[str, ...] | None = None,
-) -> DiscoveryResult:
-    """Deprecated shim for :meth:`repro.core.engine.PTMTEngine.discover`.
-
-    Builds a one-shot engine from the kwargs (see
-    :class:`repro.core.config.MiningConfig` for their meaning) and runs a
-    single discovery — the mesh kwargs route through ``engine.sharded``.
-    Compiled executables are NOT reused across calls to this shim beyond
-    the process-wide jit caches; hold a :class:`PTMTEngine` instead.
-    """
-    warnings.warn(
-        _DEPRECATION.format(name="discover", method="discover"),
-        DeprecationWarning, stacklevel=2,
-    )
-    from .config import MiningConfig
-    from .engine import PTMTEngine
-
-    engine = PTMTEngine(MiningConfig(
-        delta=delta, l_max=l_max, omega=omega, e_cap=e_cap, backend=backend,
-        zone_chunk=zone_chunk, agg=agg, merge_cap=merge_cap,
-        memory_budget_mb=memory_budget_mb, allow_overflow=allow_overflow,
-    ))
-    if mesh is not None:
-        return engine.sharded(graph, mesh, zone_axes)
-    return engine.discover(graph)
+def discover(*args, **kwargs):
+    """REMOVED — use :meth:`repro.core.engine.PTMTEngine.discover`."""
+    raise RuntimeError(_REMOVED.format(name="discover", method="discover"))
 
 
-def discover_sequential(
-    graph, *, delta: int, l_max: int, backend: str = "ref"
-) -> DiscoveryResult:
-    """Deprecated shim for :meth:`repro.core.engine.PTMTEngine.sequential`.
-
-    The TMC-analog baseline: one zone spanning the whole stream (no TZP).
-    """
-    warnings.warn(
-        _DEPRECATION.format(name="discover_sequential", method="sequential"),
-        DeprecationWarning, stacklevel=2,
-    )
-    from .config import MiningConfig
-    from .engine import PTMTEngine
-
-    return PTMTEngine(MiningConfig(
-        delta=delta, l_max=l_max, backend=backend, zone_chunk=0,
-    )).sequential(graph)
+def discover_sequential(*args, **kwargs):
+    """REMOVED — use :meth:`repro.core.engine.PTMTEngine.sequential`."""
+    raise RuntimeError(
+        _REMOVED.format(name="discover_sequential", method="sequential"))

@@ -27,8 +27,8 @@ counters; ``benchmarks/bench_perf_mining.py`` asserts the warm-call
 speedup and CI re-checks it on every push.
 
 The legacy ``discover(...)``/``discover_sequential(...)`` kwargs functions
-in :mod:`repro.core.api` remain as thin deprecated shims that construct a
-one-shot engine.
+in :mod:`repro.core.api` finished their deprecation cycle and now raise
+with a pointer back here.
 """
 
 from __future__ import annotations

@@ -482,10 +482,9 @@ class MiningExecutor:
     ``path`` ("fused"/"per-bucket"/their ``-multi`` co-mine variants),
     ``launches`` (scan dispatches in the final successful attempt — 1 for
     fused, one per bucket otherwise) and ``spill_retries`` (merge-cap
-    doublings, each re-running the launch).  ``last_run_stats`` remains as
-    a deprecated alias of the most recent run's stats; it is shared
-    mutable state and misattributes under concurrent runs — use the
-    returned ``RunOutcome.stats``.
+    doublings, each re-running the launch).  The old ``last_run_stats``
+    attribute — shared mutable state that misattributed under concurrent
+    runs — is removed; stats travel only on the returned outcome.
     """
 
     def __init__(
@@ -526,7 +525,6 @@ class MiningExecutor:
         self.memory_budget_mb = memory_budget_mb
         self.fused = fused
         self.fused_blk = backends.FUSED_BLK_DEFAULT
-        self._last_run_stats: dict = {}
         self._plan_cache: dict[tuple, object] = {}
         # observability bundle: NULL_OBS by default (shared no-op
         # singletons), so the hot paths below emit unconditionally
@@ -555,20 +553,14 @@ class MiningExecutor:
 
     @property
     def last_run_stats(self) -> dict:
-        """Deprecated: the most recent layout run's stats (racy).
-
-        Shared mutable state — two threads running through one executor
-        can interleave and read each other's stats.  Use the
-        :class:`RunOutcome`/:class:`MultiRunOutcome` returned by
-        :meth:`run_layout`/:meth:`run_fused` instead.
-        """
-        warnings.warn(
-            "MiningExecutor.last_run_stats is deprecated and misattributes "
-            "under concurrent runs; use the stats field of the RunOutcome "
-            "returned by run_layout()/run_fused()",
-            DeprecationWarning, stacklevel=2,
-        )
-        return self._last_run_stats
+        """REMOVED — stats travel on each run's returned outcome."""
+        raise RuntimeError(
+            "MiningExecutor.last_run_stats was removed after its "
+            "deprecation cycle: it was shared mutable state that "
+            "misattributed stats under concurrent runs.  Use the stats "
+            "field of the RunOutcome/MultiRunOutcome returned by "
+            "run_layout()/run_fused() (or PTMTEngine, whose "
+            "DiscoveryResult.layout carries the execution summary).")
 
     def execution_key(self, z: int, e: int) -> tuple:
         """The compile-cache key a ``[z, e]`` zone batch resolves to.
@@ -800,7 +792,6 @@ class MiningExecutor:
                 "launches": len(layout.buckets),
                 "spill_retries": 0,
             }
-            self._last_run_stats = stats
             self.obs.metrics.counter(
                 "repro_mining_launches_total",
                 path="per-bucket").inc(len(layout.buckets))
@@ -910,7 +901,6 @@ class MiningExecutor:
                     "n_slots": fl.n_slots,
                     "sweep_slots": fl.sweep_slots,
                 }
-                self._last_run_stats = stats
                 obs.metrics.counter("repro_mining_launches_total",
                                     path="fused").inc()
                 m = obs.metrics
@@ -1013,7 +1003,6 @@ class MiningExecutor:
                 "spill_retries": retries_total,
                 "n_configs": len(params),
             }
-            self._last_run_stats = stats
             return MultiRunOutcome(counts=counts, stats=stats)
 
     def run_fused_multi(self, layout: ZoneBatchLayout, params, *,
@@ -1055,7 +1044,6 @@ class MiningExecutor:
                     "sweep_slots": fl.sweep_slots,
                     "n_configs": len(params),
                 }
-                self._last_run_stats = stats
                 obs.metrics.counter("repro_mining_launches_total",
                                     path="fused-multi").inc()
                 return MultiRunOutcome(

@@ -32,6 +32,8 @@ streaming layer owns frontier bookkeeping only.
 
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
 
 from repro.obs import get_obs
@@ -103,6 +105,31 @@ def replay_stream(miner: "StreamingMiner", graph, chunk_edges: int):
                              graph.t[i:i + chunk_edges])
             latencies.append(sw.seconds)
     return latencies, total.seconds
+
+
+@dataclasses.dataclass(frozen=True)
+class SnapshotView:
+    """Immutable capture of everything a non-final ``snapshot()`` reads.
+
+    Produced by :meth:`StreamingMiner.freeze` under the caller's ingest
+    synchronization; mined by :meth:`StreamingMiner.mine_view` **without**
+    that synchronization (the serving layer's first-query-of-an-epoch mine
+    no longer stalls concurrent ingest).  The buffer arrays are captured by
+    reference — ``ingest`` replaces them wholesale and never writes in
+    place, so a view stays internally consistent while new edges arrive;
+    the finalized-counts dict *is* mutated in place by finalization and is
+    therefore copied at freeze time.
+    """
+
+    epoch: int
+    sig: tuple                    # tail-layout signature at freeze time
+    counts: dict                  # finalized-pair counts (copy)
+    n_zones_finalized: int
+    u: np.ndarray
+    v: np.ndarray
+    t: np.ndarray
+    cut: int                      # buffered edges inside the closed prefix
+    cached_tail: tuple | None     # (tail_counts, tail_zones, tail_cap)
 
 
 class StreamingMiner:
@@ -383,29 +410,87 @@ class StreamingMiner:
         finalized partial counts and the cached open-tail mine, so only the
         first snapshot of an epoch pays for device work.
         """
-        counts = dict(self._counts)
-        n_zones = self.n_zones_finalized
+        if final:
+            counts = dict(self._counts)
+            tail_counts, tail_zones, tail_cap = self._mine_tail_arrays(
+                self._u, self._v, self._t, int(self._t.size), final=True)
+            _merge_into(counts, tail_counts)
+            return DiscoveryResult(
+                counts=counts, n_zones=self.n_zones_finalized + tail_zones,
+                e_cap=tail_cap, overflow=0, delta=self.delta,
+                l_max=self.l_max,
+            )
+        view = self.freeze()
+        result, tail = self.mine_view(view)
+        self.adopt_tail(view, tail)
+        return result
+
+    # -- lock-free snapshot protocol ----------------------------------------
+
+    def freeze(self) -> SnapshotView:
+        """Capture a :class:`SnapshotView` of the current closed prefix.
+
+        Call under the same synchronization as ``ingest`` (the serving
+        session holds its lock).  The capture is O(#finalized codes): array
+        references plus one dict copy — no mining happens here.
+        """
+        if self._t.size == 0:
+            cut = 0
+        else:
+            cut = int(np.searchsorted(self._t, self.closed_time,
+                                      side="left"))
         sig = self._tail_sig()
-        if not final and self._tail_cache is not None \
+        cached = None
+        if self._tail_cache is not None \
                 and self._tail_cache[:2] == (self._epoch, sig):
+            cached = self._tail_cache[2:]
+        return SnapshotView(
+            epoch=self._epoch, sig=sig, counts=dict(self._counts),
+            n_zones_finalized=self.n_zones_finalized,
+            u=self._u, v=self._v, t=self._t, cut=cut, cached_tail=cached,
+        )
+
+    def mine_view(self, view: SnapshotView):
+        """Mine a frozen view into ``(DiscoveryResult, tail_tuple)``.
+
+        Safe to call *outside* the ingest synchronization: it reads only
+        the view (immutable by construction) and the executor, whose
+        concurrent runs are supported (per-run stats travel in the
+        ``RunOutcome``).  Pass the tail tuple back through
+        :meth:`adopt_tail` (under the lock again) to publish the mine into
+        the epoch-keyed tail cache.
+        """
+        if view.cached_tail is not None:
+            tail = view.cached_tail
+        else:
+            tail = self._mine_tail_arrays(view.u, view.v, view.t, view.cut,
+                                          final=False)
+        counts = dict(view.counts)
+        _merge_into(counts, tail[0])
+        result = DiscoveryResult(
+            counts=counts, n_zones=view.n_zones_finalized + tail[1],
+            e_cap=tail[2], overflow=0, delta=self.delta, l_max=self.l_max,
+        )
+        return result, tail
+
+    def adopt_tail(self, view: SnapshotView, tail: tuple) -> None:
+        """Publish a mined view's tail into the cache (CAS semantics).
+
+        Call under the same synchronization as ``ingest``.  A stale
+        publish — the epoch moved on while the mine ran — is discarded:
+        the cache only ever holds a tail computed for the *current* epoch,
+        so exactness is preserved no matter how the mine raced ingest.
+        """
+        if view.cached_tail is not None:
             self.tail_cache_hits += 1
             self.obs.metrics.counter("repro_streaming_tail_cache_hits_total",
                                      **self._obs_labels()).inc()
-            _, _, tail_counts, tail_zones, tail_cap = self._tail_cache
-        else:
-            tail_counts, tail_zones, tail_cap = self._mine_tail(final)
-            if not final:
-                self.tail_cache_misses += 1
-                self.obs.metrics.counter(
-                    "repro_streaming_tail_cache_misses_total",
-                    **self._obs_labels()).inc()
-                self._tail_cache = (self._epoch, sig, tail_counts,
-                                    tail_zones, tail_cap)
-        _merge_into(counts, tail_counts)
-        return DiscoveryResult(
-            counts=counts, n_zones=n_zones + tail_zones, e_cap=tail_cap,
-            overflow=0, delta=self.delta, l_max=self.l_max,
-        )
+            return
+        self.tail_cache_misses += 1
+        self.obs.metrics.counter("repro_streaming_tail_cache_misses_total",
+                                 **self._obs_labels()).inc()
+        if self._epoch == view.epoch:
+            self._tail_cache = (view.epoch, view.sig) + tuple(tail)
 
     def _tail_sig(self) -> tuple:
         """Settings that shape the tail's zone layout (cache invalidation).
@@ -420,32 +505,29 @@ class StreamingMiner:
         return (self.config.zone_layout, self.e_cap,
                 self.executor.zone_chunk)
 
-    def _mine_tail(self, final: bool) -> tuple[dict[str, int], int, int]:
-        """Mine the not-yet-finalized tail of the closed prefix (or, with
-        ``final``, the whole buffer); returns (counts, n_zones, e_cap).
+    def _mine_tail_arrays(self, u: np.ndarray, v: np.ndarray,
+                          t: np.ndarray, cut: int,
+                          final: bool) -> tuple[dict[str, int], int, int]:
+        """Mine the first ``cut`` buffered edges of ``(u, v, t)``; returns
+        ``(counts, n_zones, e_cap)``.
 
         The tail flows through the same plan → :func:`tzp.
         build_zone_layout` → :meth:`MiningExecutor.run_layout` pipeline as
         batch discovery, so streaming inherits the size-bucketed layout
-        (``self.last_tail_layout`` records the decomposition used).
+        (``self.last_tail_layout`` records the decomposition used).  The
+        arrays come in explicitly (not read off ``self``) so a frozen
+        :class:`SnapshotView` can be mined concurrently with ingest.
         """
-        if self._t.size == 0:
-            return {}, 0, 0
-        if final:
-            cut = int(self._t.size)
-        else:
-            cut = int(np.searchsorted(self._t, self.closed_time,
-                                      side="left"))
-        if cut == 0:
+        if t.size == 0 or cut == 0:
             return {}, 0, 0
         with self.obs.tracer.span("stream.tail_mine", edges=cut,
                                   final=final) as sp:
             # rebase to the tail start: int32-safe, shift-invariant
             tail = TemporalGraph(
-                u=self._u[:cut], v=self._v[:cut],
-                t=(self._t[:cut] - self._t[0]).astype(np.int32),
-                n_nodes=int(max(self._u[:cut].max(initial=-1),
-                                self._v[:cut].max(initial=-1)) + 1),
+                u=u[:cut], v=v[:cut],
+                t=(t[:cut] - t[0]).astype(np.int32),
+                n_nodes=int(max(u[:cut].max(initial=-1),
+                                v[:cut].max(initial=-1)) + 1),
             )
             plan = tzp.plan_zones(
                 tail, delta=self.delta, l_max=self.l_max,
@@ -461,3 +543,75 @@ class StreamingMiner:
             self.last_tail_layout = layout.summary()
         return (transitions.device_counts_to_dict(tail_counts),
                 plan.n_zones, layout.e_cap)
+
+    # -- checkpoint state round-trip -----------------------------------------
+
+    def state_dict(self) -> dict:
+        """Exact capture of the miner's durable state (checkpointing).
+
+        Call under the same synchronization as ``ingest``.  The dict holds
+        the frozen config, the finalized closed-prefix counts, the epoch
+        and its closure signature, the frontier cursors, the monotone
+        counters, the open-tail edge buffer (copies — a checkpoint must
+        not alias the live buffer), and the tail-layout signature.  A
+        miner restored from it and fed the remainder of the stream is
+        **byte-identical** to one that never stopped: every field that
+        influences future finalization or snapshots is included, and the
+        epoch-keyed tail cache — a pure re-derivable function of the rest
+        — is deliberately excluded (the first snapshot after restore
+        replays only the open tail).
+        """
+        return {
+            "config": self.config.to_dict(),
+            "epoch": self._epoch,
+            "closed_sig": list(self._closed_sig),
+            "counts": dict(self._counts),
+            "zone_start": self._s,
+            "t_head": self._t_head,
+            "n_edges_ingested": self.n_edges_ingested,
+            "n_edges_retired": self.n_edges_retired,
+            "n_zones_finalized": self.n_zones_finalized,
+            "tail_u": self._u.copy(),
+            "tail_v": self._v.copy(),
+            "tail_t": self._t.copy(),
+            "tail_sig": list(self._tail_sig()),
+        }
+
+    def restore_state(self, state: dict) -> None:
+        """Install a :meth:`state_dict` capture into this (fresh) miner.
+
+        The miner must have been constructed with the *same* config the
+        state was captured under, and its executor must resolve the same
+        tail-layout signature — a restored session that would silently
+        mine under different layout settings is rejected instead, because
+        the byte-identity guarantee only holds when the restored pipeline
+        is the checkpointed one.
+        """
+        cfg = state["config"]
+        if cfg != self.config.to_dict():
+            theirs = MiningConfig.from_json(cfg)
+            raise ValueError(
+                f"checkpointed config {theirs.to_json()} does not match "
+                f"this miner's {self.config.to_json()}; restore into a "
+                f"miner built from the checkpointed config")
+        sig = list(self._tail_sig())
+        if list(state.get("tail_sig", sig)) != sig:
+            raise ValueError(
+                f"checkpointed tail-layout signature {state['tail_sig']} "
+                f"does not match this miner's {sig}; the executor's "
+                f"layout settings differ from the checkpointed ones")
+        u, v, t = validate_edge_chunk(
+            state["tail_u"], state["tail_v"], state["tail_t"])
+        self._u, self._v, self._t = u, v, t
+        self._s = None if state["zone_start"] is None \
+            else int(state["zone_start"])
+        self._t_head = None if state["t_head"] is None \
+            else int(state["t_head"])
+        self._counts = {str(c): int(n) for c, n in state["counts"].items()}
+        self.n_edges_ingested = int(state["n_edges_ingested"])
+        self.n_edges_retired = int(state["n_edges_retired"])
+        self.n_zones_finalized = int(state["n_zones_finalized"])
+        self._epoch = int(state["epoch"])
+        self._closed_sig = tuple(state["closed_sig"])
+        # re-derivable: the first snapshot after restore re-mines the tail
+        self._tail_cache = None

@@ -1,3 +1,3 @@
-from . import engine, motif
+from . import cluster, engine, motif
 
-__all__ = ["engine", "motif"]
+__all__ = ["cluster", "engine", "motif"]

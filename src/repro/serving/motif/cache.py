@@ -43,6 +43,15 @@ class EpochCache:
         self.hits += 1
         return value
 
+    def peek(self, epoch: int):
+        """Uncounted lookup (no hit/miss, no LRU bump).
+
+        The compare-and-swap re-check after a lock-free snapshot mine:
+        the racing reader already paid (and recorded) its miss, so the
+        re-check must not double-count or reorder the LRU.
+        """
+        return self._entries.get(epoch)
+
     def put(self, epoch: int, value) -> None:
         self._entries[epoch] = value
         self._entries.move_to_end(epoch)

@@ -59,6 +59,49 @@ class SessionManager:
         reservation is rolled back, so the name is immediately reusable.
         """
         merged = {**self.session_defaults, **params}
+        return self._admit(name, lambda: MotifSession(name, **merged))
+
+    def restore(self, state: dict, **params) -> MotifSession:
+        """Rebuild a tenant session from a checkpointed state capture.
+
+        ``state`` is a :meth:`MotifSession.checkpoint_state` dict (the
+        cluster layer hands over the decoded payload of a
+        :class:`~repro.serving.cluster.checkpoint.SessionCheckpoint`).
+        A fresh session is built for the checkpointed config — when the
+        manager's defaults carry a shared ``engine=``, the checkpointed
+        config is expressed as per-tenant overrides of the engine's config
+        so the warm executor is still shared whenever the configs agree —
+        and the captured miner + admission state is installed before the
+        session becomes visible to ``get``/``names``.  Restored counts are
+        byte-identical to a session that never stopped (asserted in
+        ``tests/test_cluster.py``).
+        """
+        from repro.core.config import MiningConfig
+
+        name = state["name"]
+        cfg = MiningConfig.from_json(state["miner"]["config"])
+        merged = {**self.session_defaults, **params}
+        if merged.get("engine") is not None:
+            # per-tenant overrides of the shared engine's config; empty
+            # when they agree, so the warm executor is shared
+            eng_cfg = merged["engine"].config
+            merged.update({
+                k: v for k, v in cfg.to_dict().items()
+                if getattr(eng_cfg, k) != v
+            })
+        else:
+            merged.pop("config", None)
+            merged["config"] = cfg
+
+        def build() -> MotifSession:
+            session = MotifSession(name, **merged)
+            session.restore_state(state)
+            return session
+
+        return self._admit(name, build)
+
+    def _admit(self, name: str, build) -> MotifSession:
+        """Reserve ``name``, run ``build()`` outside the lock, publish."""
         with self._lock:
             if name in self._sessions:
                 raise ValueError(f"session {name!r} already exists")
@@ -69,7 +112,7 @@ class SessionManager:
                 )
             self._sessions[name] = _RESERVED
         try:
-            session = MotifSession(name, **merged)
+            session = build()
         except BaseException:
             with self._lock:
                 if self._sessions.get(name) is _RESERVED:
@@ -135,9 +178,24 @@ class SessionManager:
         deployment), that engine runs the sweep — its compile caches stay
         warm; otherwise a manager-level engine is built lazily from the
         first tenant's config.
+
+        A tenant dropped between auto-selection (``names=None``) and the
+        mine is silently skipped — the registry moved on and the caller
+        asked for "everyone current", not a fixed set.  Explicitly named
+        tenants are a fixed set: a missing one raises ``KeyError``.
         """
-        selected = self.names() if names is None else list(names)
-        sessions = [self.get(n) for n in selected]
+        explicit = names is not None
+        selected = list(names) if explicit else self.names()
+        sessions, kept = [], []
+        for n in selected:
+            try:
+                sessions.append(self.get(n))
+            except KeyError:
+                if explicit:
+                    raise
+                continue        # dropped mid-call under auto-selection
+            kept.append(n)
+        selected = kept
         if not sessions:
             return {}
         engines = {id(s.mining_engine): s.mining_engine

@@ -205,31 +205,105 @@ class MotifSession:
     def engine(self) -> QueryEngine:
         """Engine for the current epoch; mines a snapshot only on cache miss.
 
-        The miss path mines under the session lock — ``snapshot()`` reads
-        miner buffers that ``ingest`` mutates, so the first query of an
-        epoch does stall concurrent ingest for the mine.  The returned
-        engine is immutable and stamped with its epoch, so everything
-        *after* the fetch (query evaluation, lazy index builds) runs
-        lock-free and cache hits cost only the epoch lookup.
+        The miss path mines **outside** the session lock: the lock is held
+        only to freeze an immutable :class:`~repro.core.streaming.
+        SnapshotView` of the closed prefix (O(#codes), no device work) and
+        again to compare-and-swap the mined engine into the cache — so the
+        first query of an epoch no longer stalls concurrent ``ingest`` for
+        the duration of the mine (the historical stall, regression-tested
+        in ``tests/test_motif_service.py``).  If two queries race the same
+        cold epoch both mine, but only the first CAS wins and both return
+        the winning engine; equal epochs guarantee equal snapshots, so the
+        loser's work is redundant, never wrong.  The returned engine is
+        immutable and stamped with its epoch, so everything after the
+        fetch (query evaluation, lazy index builds) also runs lock-free.
         """
         with self.lock:
             self.queries += 1
             epoch = self.miner.epoch
             engine = self.cache.get(epoch)
-            if engine is None:
-                with self.obs.tracer.span("serve.snapshot",
-                                          tenant=self.name, epoch=epoch):
-                    engine = QueryEngine(self.miner.snapshot(), epoch=epoch)
-                self.snapshots_mined += 1
-                self.cache.put(epoch, engine)
-                self.obs.metrics.counter(
-                    "repro_serving_snapshot_cache_misses_total",
-                    tenant=self.name).inc()
-            else:
+            if engine is not None:
                 self.obs.metrics.counter(
                     "repro_serving_snapshot_cache_hits_total",
                     tenant=self.name).inc()
-            return engine
+                return engine
+            view = self.miner.freeze()
+        # device mining happens here, with the lock RELEASED — ingest
+        # proceeds concurrently against the buffers the view froze
+        with self.obs.tracer.span("serve.snapshot",
+                                  tenant=self.name, epoch=epoch):
+            result, tail = self.miner.mine_view(view)
+        engine = QueryEngine(result, epoch=epoch)
+        with self.lock:
+            self.miner.adopt_tail(view, tail)
+            self.snapshots_mined += 1
+            self.obs.metrics.counter(
+                "repro_serving_snapshot_cache_misses_total",
+                tenant=self.name).inc()
+            current = self.cache.peek(epoch)
+            if current is None:
+                self.cache.put(epoch, engine)
+            else:
+                engine = current     # a racing query won the CAS; serve its
+            return engine            # engine (identical counts by epoch)
+
+    # -- checkpoint/restore --------------------------------------------------
+
+    def checkpoint_state(self) -> dict:
+        """Consistent durable capture of this tenant's state.
+
+        Taken under the session lock, so the miner state and the admission
+        window are from one instant: the miner's
+        :meth:`~repro.core.streaming.StreamingMiner.state_dict` plus the
+        not-yet-admitted pending edges and the ingest-side counters.
+        Query-side state (snapshot cache, query counters) is deliberately
+        *not* durable — it is a pure re-derivable function of the miner
+        state and rebuilds on first use after restore.
+        """
+        with self.lock:
+            if self._pending:
+                pend_u = np.concatenate(self._pend_u)
+                pend_v = np.concatenate(self._pend_v)
+                pend_t = np.concatenate(self._pend_t)
+            else:
+                pend_u = np.zeros(0, np.int32)
+                pend_v = np.zeros(0, np.int32)
+                pend_t = np.zeros(0, np.int64)
+            return {
+                "name": self.name,
+                "miner": self.miner.state_dict(),
+                "pend_u": pend_u, "pend_v": pend_v, "pend_t": pend_t,
+                "edges_accepted": self.edges_accepted,
+                "edges_discarded": self.edges_discarded,
+                "flushes": self.flushes,
+            }
+
+    def restore_state(self, state: dict) -> None:
+        """Install a :meth:`checkpoint_state` capture into this session.
+
+        Restore into a **freshly built** session for the same tenant name
+        (the manager's ``restore`` does this): the miner validates that
+        its config and tail-layout signature match the checkpointed ones,
+        the admission window is re-buffered, and ingest-side counters
+        resume.  Continuing the same edge stream afterwards yields state
+        byte-identical to a session that never stopped.
+        """
+        if state["name"] != self.name:
+            raise ValueError(
+                f"checkpoint is for tenant {state['name']!r}, "
+                f"not {self.name!r}")
+        u, v, t = validate_edge_chunk(
+            state["pend_u"], state["pend_v"], state["pend_t"])
+        with self.lock:
+            self.miner.restore_state(state["miner"])
+            self._pend_u = [u] if t.size else []
+            self._pend_v = [v] if t.size else []
+            self._pend_t = [t] if t.size else []
+            self._pending = int(t.size)
+            self.edges_accepted = int(state["edges_accepted"])
+            self.edges_discarded = int(state["edges_discarded"])
+            self.flushes = int(state["flushes"])
+            self._note_pending()
 
     # -- reporting ----------------------------------------------------------
 

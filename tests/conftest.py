@@ -34,6 +34,31 @@ def random_graph(seed: int, n_edges: int, n_nodes: int,
     return from_edges(u, v, t)
 
 
+def batch_discover(graph, *, mesh=None, zone_axes=None, **config_kwargs):
+    """One-shot engine-API discovery for tests sweeping many configs.
+
+    Tests that hammer a single config should hold a warm
+    :class:`~repro.core.engine.PTMTEngine` instead — this helper pays a
+    fresh engine per call by design (each parametrized config is mined
+    once).
+    """
+    from repro.core import MiningConfig, PTMTEngine
+
+    engine = PTMTEngine(MiningConfig(**config_kwargs))
+    if mesh is not None:
+        return engine.sharded(graph, mesh, zone_axes)
+    return engine.discover(graph)
+
+
+def batch_sequential(graph, *, delta, l_max, backend="ref"):
+    """One-shot TMC-analog baseline (single zone, no TZP)."""
+    from repro.core import MiningConfig, PTMTEngine
+
+    return PTMTEngine(MiningConfig(
+        delta=delta, l_max=l_max, backend=backend, zone_chunk=0,
+    )).sequential(graph)
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

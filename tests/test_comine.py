@@ -244,16 +244,13 @@ def test_run_stats_travel_with_outcome_under_concurrency():
     assert not errors, errors[:4]
 
 
-def test_last_run_stats_deprecated_alias():
-    g = _graph(seed=2, n=150)
+def test_last_run_stats_removed_with_outcome_pointer():
+    """The racy shared-state alias finished its deprecation cycle —
+    reading it now raises and points at the per-run RunOutcome.stats."""
     cfg = MiningConfig(delta=40, l_max=3, backend="ref")
-    plan = tzp.plan_zones(g, delta=40, l_max=3, omega=cfg.omega)
-    lay = tzp.build_zone_layout(g, plan, layout="dense")
     ex = MiningExecutor.from_config(cfg)
-    out = ex.run_layout(lay)
-    with pytest.warns(DeprecationWarning, match="last_run_stats"):
-        legacy = ex.last_run_stats
-    assert legacy == out.stats
+    with pytest.raises(RuntimeError, match="RunOutcome"):
+        ex.last_run_stats
 
 
 # ---------------------------------------------------------------------------

@@ -158,12 +158,13 @@ def test_cli_rejects_bad_choices():
     assert set(AGG_MODES) >= {"auto", "legacy", "hierarchical", "pipelined"}
 
 
-# -- deprecated shims -------------------------------------------------------
+# -- removed shims ----------------------------------------------------------
 
-def test_discover_shims_warn_deprecation_and_agree():
+def test_discover_shims_removed_with_engine_pointer():
+    """The one-shot kwargs functions finished their deprecation cycle:
+    still importable, but calling raises with migration instructions."""
     g = random_graph(3, 200, 20, 2_000)
-    with pytest.warns(DeprecationWarning, match="PTMTEngine"):
-        old = discover(g, delta=60, l_max=3, omega=4)
-    with pytest.warns(DeprecationWarning, match="PTMTEngine"):
-        old_seq = discover_sequential(g, delta=60, l_max=3)
-    assert old.counts == old_seq.counts
+    with pytest.raises(RuntimeError, match="PTMTEngine"):
+        discover(g, delta=60, l_max=3, omega=4)
+    with pytest.raises(RuntimeError, match="PTMTEngine"):
+        discover_sequential(g, delta=60, l_max=3)

@@ -13,9 +13,9 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
-from repro.core import discover, discover_sequential, oracle
+from repro.core import oracle
 from repro.data import synthetic_graphs as sg
-from conftest import random_graph
+from conftest import batch_discover, batch_sequential, random_graph
 
 
 def assert_counts_equal(a: dict, b: dict, tag=""):
@@ -36,7 +36,7 @@ def test_partitioned_matches_oracle(gp, delta, l_max, omega):
     """Lemma 4.2: inclusion-exclusion over zones is exact."""
     g = random_graph(*gp)
     expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
-    got = discover(g, delta=delta, l_max=l_max, omega=omega)
+    got = batch_discover(g, delta=delta, l_max=l_max, omega=omega)
     assert got.overflow == 0
     assert_counts_equal(expect, got.counts, "partitioned vs oracle")
 
@@ -50,7 +50,7 @@ def test_partitioned_matches_oracle(gp, delta, l_max, omega):
 def test_sequential_matches_oracle(gp, delta, l_max):
     g = random_graph(*gp)
     expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
-    got = discover_sequential(g, delta=delta, l_max=l_max)
+    got = batch_sequential(g, delta=delta, l_max=l_max)
     assert_counts_equal(expect, got.counts, "sequential vs oracle")
 
 
@@ -59,30 +59,30 @@ def test_sequential_matches_oracle(gp, delta, l_max):
 def test_partitioned_matches_sequential_bursty(seed, omega):
     """Accuracy validation on the bursty regime (paper Section 5.2)."""
     g = sg.bursty_stream(500, 12, seed=seed)
-    seq = discover_sequential(g, delta=75, l_max=5)
-    par = discover(g, delta=75, l_max=5, omega=omega)
+    seq = batch_sequential(g, delta=75, l_max=5)
+    par = batch_discover(g, delta=75, l_max=5, omega=omega)
     assert_counts_equal(seq.counts, par.counts, "par vs seq")
 
 
 def test_total_process_count_equals_edges():
     """Every edge seeds exactly one process (no-fork property)."""
     g = sg.poisson_stream(800, 40, rate=0.5, seed=9)
-    res = discover(g, delta=20, l_max=4, omega=3)
+    res = batch_discover(g, delta=20, l_max=4, omega=3)
     assert res.total_processes() == g.n_edges
 
 
 def test_adaptive_capacity_still_exact():
     g = sg.bursty_stream(600, 10, seed=3)
     expect = dict(oracle.count_codes(g.u, g.v, g.t, 120, 6))
-    got = discover(g, delta=120, l_max=6, omega=4, e_cap=64)
+    got = batch_discover(g, delta=120, l_max=6, omega=4, e_cap=64)
     assert got.overflow == 0
     assert_counts_equal(expect, got.counts, "adaptive-cap")
 
 
 def test_zone_chunking_invariance():
     g = sg.poisson_stream(400, 15, rate=1.0, seed=5)
-    a = discover(g, delta=15, l_max=4, omega=2, zone_chunk=None)
-    b = discover(g, delta=15, l_max=4, omega=2, zone_chunk=2)
+    a = batch_discover(g, delta=15, l_max=4, omega=2, zone_chunk=None)
+    b = batch_discover(g, delta=15, l_max=4, omega=2, zone_chunk=2)
     assert_counts_equal(a.counts, b.counts, "chunked vs unchunked")
 
 
@@ -96,13 +96,13 @@ def test_self_loops_and_ties():
 
     g = from_edges(u, v, t)
     expect = dict(oracle.count_codes(g.u, g.v, g.t, 5, 5))
-    got = discover(g, delta=5, l_max=5, omega=2)
+    got = batch_discover(g, delta=5, l_max=5, omega=2)
     assert_counts_equal(expect, got.counts, "ties+selfloops")
 
 
 def test_transition_tree_consistency():
     g = sg.triadic_stream(600, 25, seed=2)
-    res = discover(g, delta=120, l_max=4, omega=3)
+    res = batch_discover(g, delta=120, l_max=4, omega=3)
     tree = res.tree()
     # root through == total processes; children sum <= parent's through
     assert tree.root.through == res.total_processes()
@@ -119,7 +119,7 @@ def test_empty_and_single_edge():
     from repro.core import from_edges
 
     g0 = from_edges(np.array([], int), np.array([], int), np.array([], int))
-    assert discover(g0, delta=5, l_max=3).counts == {}
+    assert batch_discover(g0, delta=5, l_max=3).counts == {}
     g1 = from_edges(np.array([3]), np.array([8]), np.array([100]))
-    res = discover(g1, delta=5, l_max=3)
+    res = batch_discover(g1, delta=5, l_max=3)
     assert res.counts == {"01": 1}

@@ -21,9 +21,9 @@ Two layers:
 import numpy as np
 import pytest
 
-from repro.core import MiningExecutor, discover, oracle, transitions, tzp
+from repro.core import MiningExecutor, oracle, transitions, tzp
 from repro.core.temporal_graph import from_edges
-from conftest import random_graph
+from conftest import batch_discover, random_graph
 
 BACKENDS = ("ref", "numpy", "pallas")
 
@@ -82,7 +82,7 @@ def test_full_path_backends_agree_on_corpus(name, gen, params):
     e_cap = params["e_cap"]
     results = {}
     for backend in BACKENDS:
-        res = discover(g, delta=params["delta"], l_max=params["l_max"],
+        res = batch_discover(g, delta=params["delta"], l_max=params["l_max"],
                        omega=params["omega"], e_cap=e_cap, backend=backend,
                        allow_overflow=True)
         results[backend] = res
@@ -160,7 +160,7 @@ def test_mesh_hierarchical_matches_single_device():
     ex = MiningExecutor(delta=delta, l_max=l_max, zone_chunk=2,
                         agg="hierarchical")
     counts = mining.mine_on_mesh(batch, mesh, ("z",), executor=ex)
-    expect = discover(g, delta=delta, l_max=l_max, omega=2)
+    expect = batch_discover(g, delta=delta, l_max=l_max, omega=2)
     assert _dict(counts) == expect.counts
 
 
@@ -444,9 +444,9 @@ def test_discover_refuses_overflow_and_allows_optin():
     from repro.core import ZoneOverflowError
 
     with pytest.raises(ZoneOverflowError, match="dropped"):
-        discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16)
+        batch_discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16)
     with pytest.warns(RuntimeWarning, match="dropped"):
-        res = discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16,
+        res = batch_discover(g, delta=delta, l_max=l_max, omega=2, e_cap=16,
                        allow_overflow=True)
     assert res.overflow > 0
 
@@ -489,8 +489,8 @@ if hyp is not None:
         equal the standalone oracle whenever no edges were dropped."""
         kw = dict(delta=delta, l_max=l_max, omega=omega, e_cap=e_cap,
                   allow_overflow=True)
-        a = discover(g, backend="ref", **kw)
-        b = discover(g, backend="numpy", **kw)
+        a = batch_discover(g, backend="ref", **kw)
+        b = batch_discover(g, backend="numpy", **kw)
         assert a.counts == b.counts
         assert a.overflow == b.overflow
         if a.overflow == 0:
@@ -529,6 +529,6 @@ if hyp is not None:
         Python.  The corpus test covers the adversarial regimes for pallas
         deterministically.
         """
-        a = discover(g, delta=delta, l_max=l_max, omega=2, backend="pallas")
-        b = discover(g, delta=delta, l_max=l_max, omega=2, backend="ref")
+        a = batch_discover(g, delta=delta, l_max=l_max, omega=2, backend="pallas")
+        b = batch_discover(g, delta=delta, l_max=l_max, omega=2, backend="ref")
         assert a.counts == b.counts

@@ -14,13 +14,12 @@ from repro.core import (
     ZoneChunkError,
     available_backends,
     backends,
-    discover,
     get_backend,
     oracle,
     transitions,
     tzp,
 )
-from conftest import random_graph
+from conftest import batch_discover, random_graph
 
 
 def _counts_dict(counts):
@@ -64,8 +63,8 @@ def test_register_backend_rejects_duplicates_and_accepts_plugins():
     try:
         assert "test-plugin" in available_backends()
         g = random_graph(0, 60, 6, 200)
-        got = discover(g, delta=20, l_max=3, omega=2, backend="test-plugin")
-        expect = discover(g, delta=20, l_max=3, omega=2, backend="ref")
+        got = batch_discover(g, delta=20, l_max=3, omega=2, backend="test-plugin")
+        expect = batch_discover(g, delta=20, l_max=3, omega=2, backend="ref")
         assert got.counts == expect.counts
         assert spec.scan is get_backend("ref").scan
     finally:
@@ -133,7 +132,7 @@ def test_numpy_backend_matches_oracle_end_to_end():
         g = random_graph(seed, 180, 9, 500)
         delta, l_max = 35, 4
         expect = dict(oracle.count_codes(g.u, g.v, g.t, delta, l_max))
-        got = discover(g, delta=delta, l_max=l_max, omega=3,
+        got = batch_discover(g, delta=delta, l_max=l_max, omega=3,
                        backend="numpy")
         assert got.counts == expect, f"seed={seed}"
 

@@ -78,11 +78,12 @@ def test_kernel_self_loops_and_ties():
 
 def test_kernel_end_to_end_discovery():
     """Full pipeline with backend='pallas' equals brute-force oracle."""
-    from repro.core import discover, oracle
+    from repro.core import MiningConfig, PTMTEngine, oracle
 
     g = sg.triadic_stream(400, 18, seed=9)
     expect = dict(oracle.count_codes(g.u, g.v, g.t, 100, 4))
-    got = discover(g, delta=100, l_max=4, omega=3, backend="pallas")
+    got = PTMTEngine(MiningConfig(
+        delta=100, l_max=4, omega=3, backend="pallas")).discover(g)
     keys = set(expect) | set(got.counts)
     bad = {k for k in keys if expect.get(k, 0) != got.counts.get(k, 0)}
     assert not bad

@@ -3,7 +3,7 @@
 The load-bearing guarantees:
 
 * interleaved ingest+query across >= 2 tenant sessions answers exactly what
-  batch ``discover()`` answers on each session's closed prefix of admitted
+  batch ``batch_discover()`` answers on each session's closed prefix of admitted
   edges (Lemma 4.2 lifted to the serving layer);
 * repeated queries within one epoch hit the snapshot cache — no re-mine —
   and the epoch counter bumps only when the closed prefix changes;
@@ -12,11 +12,12 @@ The load-bearing guarantees:
 """
 
 import threading
+import time
 
 import numpy as np
 import pytest
 
-from repro.core import TemporalGraph, discover, transitions
+from repro.core import TemporalGraph, transitions
 from repro.core.streaming import StreamingMiner
 from repro.serving.motif import (
     EpochCache,
@@ -24,7 +25,7 @@ from repro.serving.motif import (
     QueryRequest,
     SessionManager,
 )
-from conftest import random_graph
+from conftest import batch_discover, random_graph
 
 DELTA, L_MAX, OMEGA = 20, 4, 3
 
@@ -44,7 +45,7 @@ def make_service(**kw):
 def assert_queries_match_batch(service, name, g, backend="ref"):
     """Every query op must agree with batch discover on the closed prefix."""
     sess = service.manager.get(name)
-    expect = discover(closed_prefix(g, sess.closed_time), delta=DELTA,
+    expect = batch_discover(closed_prefix(g, sess.closed_time), delta=DELTA,
                       l_max=L_MAX, omega=OMEGA, backend=backend)
     tree = expect.tree()
 
@@ -102,7 +103,7 @@ def test_interleaved_ingest_query_two_tenants_matches_batch():
             sess = service.manager.get(name)
             if sess.closed_time is None:
                 continue
-            expect = discover(closed_prefix(g, sess.closed_time),
+            expect = batch_discover(closed_prefix(g, sess.closed_time),
                               delta=DELTA, l_max=L_MAX, omega=OMEGA)
             assert sess.engine().result.counts == expect.counts, \
                 f"{name} at edge {i}"
@@ -373,3 +374,152 @@ def test_concurrent_tenants_threaded():
     for name, g in graphs.items():
         service.flush(name)
         assert_queries_match_batch(service, name, g, backend="numpy")
+
+
+def test_drop_races_concurrent_ingest_and_query():
+    """``drop()`` mid-traffic: racing ingest/query either complete normally
+    or see a clean ``KeyError`` — never corruption — and the returned
+    session object stays exact for its holder (admitted edges are whole
+    chunks, so the closed prefix still matches batch discover)."""
+    g = random_graph(33, 1_200, 10, 4_000)
+    service = make_service(backend="numpy", ingest_batch=32)
+    service.create_session("t")
+    service.ingest("t", g.u[:300], g.v[:300], g.t[:300])
+    service.flush("t")
+
+    errors: list[Exception] = []
+    dropped = threading.Event()
+
+    def ingester():
+        try:
+            for i in range(300, g.n_edges, 30):
+                service.ingest("t", g.u[i:i + 30], g.v[i:i + 30],
+                               g.t[i:i + 30])
+        except KeyError:
+            pass                                 # dropped under our feet
+        except Exception as exc:                 # pragma: no cover
+            errors.append(exc)
+
+    def querier():
+        try:
+            while not dropped.is_set():
+                try:
+                    r = service.query(QueryRequest(session="t", op="total"))
+                    assert r.payload >= 0
+                except KeyError:
+                    break                        # dropped under our feet
+        except Exception as exc:                 # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=ingester),
+               threading.Thread(target=querier)]
+    for t in threads:
+        t.start()
+    time.sleep(0.05)
+    sess = service.drop_session("t")
+    dropped.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert "t" not in service.sessions()
+    with pytest.raises(KeyError):
+        service.query(QueryRequest(session="t", op="total"))
+
+    # the detached session is still a live, exact miner
+    sess.flush()
+    expect = batch_discover(closed_prefix(g, sess.closed_time), delta=DELTA,
+                            l_max=L_MAX, omega=OMEGA, backend="numpy")
+    assert sess.engine().result.counts == expect.counts
+    # and the name is immediately reusable
+    service.create_session("t")
+
+
+def test_restore_respects_max_sessions():
+    manager = SessionManager(max_sessions=1, delta=DELTA, l_max=L_MAX,
+                             omega=OMEGA)
+    manager.create("a")
+    state = dict(manager.get("a").checkpoint_state(), name="b")
+    with pytest.raises(RuntimeError, match="session limit"):
+        manager.restore(state)
+
+
+def test_comine_with_tenant_dropped_mid_call():
+    """Explicitly named tenants are a fixed set (missing -> KeyError);
+    auto-selection treats a drop between listing and mining as benign."""
+    g = random_graph(35, 300, 8, 1_000)
+    service = make_service(ingest_batch=64)
+    service.create_session("a")
+    service.create_session("b")
+    service.drop_session("b")
+    with pytest.raises(KeyError, match="unknown session"):
+        service.comine(g, ["a", "b"])
+
+    # deterministic stand-in for the drop-between-names()-and-get() race:
+    # auto-selection sees a tenant that is gone by fetch time
+    manager = service.manager
+    real_names = manager.names
+    manager.names = lambda: real_names() + ["ghost"]
+    try:
+        results = service.comine(g)
+    finally:
+        manager.names = real_names
+    assert sorted(results) == ["a"]
+    assert results["a"].counts == batch_discover(
+        g, delta=DELTA, l_max=L_MAX, omega=OMEGA).counts
+
+
+def test_first_query_of_epoch_does_not_stall_ingest():
+    """Regression: the cold-epoch snapshot mine must run OUTSIDE the
+    session lock.  With the mine artificially held open, a concurrent
+    ingest has to complete; before the fix it blocked for the whole mine
+    (first-query-of-epoch stall)."""
+    g = random_graph(37, 600, 10, 2_000)
+    service = make_service(ingest_batch=64)
+    service.create_session("t")
+    service.ingest("t", g.u[:300], g.v[:300], g.t[:300])
+    sess = service.manager.get("t")
+
+    real_mine = sess.miner.mine_view
+    in_mine = threading.Event()
+    release = threading.Event()
+
+    def held_mine(view):
+        in_mine.set()
+        assert release.wait(10), "test harness never released the mine"
+        return real_mine(view)
+
+    # patch the miner's snapshot mine (NOT the executor — ingest-side
+    # flushes go through the executor too and must stay fast)
+    sess.miner.mine_view = held_mine
+    resp: dict = {}
+
+    def query():
+        resp["r"] = service.query(QueryRequest(session="t", op="total"))
+
+    qt = threading.Thread(target=query)
+    qt.start()
+    assert in_mine.wait(10), "query never reached the snapshot mine"
+
+    ingested = threading.Event()
+
+    def ingest():
+        service.ingest("t", g.u[300:], g.v[300:], g.t[300:])
+        service.flush("t")
+        ingested.set()
+
+    it = threading.Thread(target=ingest)
+    it.start()
+    # the mine is still blocked (release unset) -- ingest+flush must
+    # finish anyway because the lock was dropped for the device work
+    assert ingested.wait(10), \
+        "ingest stalled behind the first query of the epoch"
+    assert not resp, "query returned before its mine was released"
+    release.set()
+    qt.join(10)
+    assert not qt.is_alive()
+    sess.miner.mine_view = real_mine
+
+    assert resp["r"].payload >= 0
+    # the raced snapshot stays exact: served counts on the final closed
+    # prefix still equal batch discovery
+    assert_queries_match_batch(service, "t", g)

@@ -1,6 +1,6 @@
 """Streaming-vs-batch equivalence (the Lemma 4.2 incremental argument).
 
-``StreamingMiner.snapshot()`` must reproduce batch ``discover()`` **exactly,
+``StreamingMiner.snapshot()`` must reproduce batch ``batch_discover()`` **exactly,
 per motif code** on the closed prefix (edges with ``t < t_head - L_b``),
 for arbitrary chunk boundaries — including chunk sizes that do not divide
 the edge count — and for both the reference and the NumPy oracle backends.
@@ -9,8 +9,8 @@ the edge count — and for both the reference and the NumPy oracle backends.
 import numpy as np
 import pytest
 
-from repro.core import StreamingMiner, TemporalGraph, discover, oracle
-from conftest import random_graph
+from repro.core import StreamingMiner, TemporalGraph, oracle
+from conftest import batch_discover, random_graph
 
 
 def _prefix(g: TemporalGraph, cut_time: int) -> TemporalGraph:
@@ -34,12 +34,12 @@ def test_snapshot_matches_batch_on_closed_prefix(backend, chunk):
     _feed(miner, g, chunk)
 
     snap = miner.snapshot()
-    expect = discover(_prefix(g, miner.closed_time), delta=delta,
+    expect = batch_discover(_prefix(g, miner.closed_time), delta=delta,
                       l_max=l_max, omega=omega, backend=backend)
     assert snap.counts == expect.counts, f"chunk={chunk}"
 
     final = miner.snapshot(final=True)
-    full = discover(g, delta=delta, l_max=l_max, omega=omega,
+    full = batch_discover(g, delta=delta, l_max=l_max, omega=omega,
                     backend=backend)
     assert final.counts == full.counts, f"chunk={chunk} (final)"
 
@@ -55,7 +55,7 @@ def test_intermediate_snapshots_are_exact():
         miner.ingest(g.u[i:i + chunk], g.v[i:i + chunk], g.t[i:i + chunk])
         snap = miner.snapshot()
         prefix = _prefix(g, miner.closed_time)
-        expect = discover(prefix, delta=delta, l_max=l_max, omega=omega)
+        expect = batch_discover(prefix, delta=delta, l_max=l_max, omega=omega)
         assert snap.counts == expect.counts, f"at edge {i}"
         assert snap.total_processes() == prefix.n_edges
 
@@ -126,7 +126,7 @@ def test_large_epoch_timestamps():
         miner.ingest(g.u[i:i + 90], g.v[i:i + 90],
                      g.t[i:i + 90].astype(np.int64) + offset)
     final = miner.snapshot(final=True)
-    expect = discover(g, delta=delta, l_max=l_max, omega=omega)
+    expect = batch_discover(g, delta=delta, l_max=l_max, omega=omega)
     assert final.counts == expect.counts
 
 
@@ -148,7 +148,7 @@ def test_snapshot_reuses_tail_within_epoch():
     # final=True must bypass the cache (different cut), not poison it
     fin = miner.snapshot(final=True)
     assert miner.tail_cache_misses == 1
-    expect_fin = discover(g, delta=delta, l_max=l_max, omega=omega)
+    expect_fin = batch_discover(g, delta=delta, l_max=l_max, omega=omega)
     assert fin.counts == expect_fin.counts
 
     # an epoch-advancing ingest invalidates: next snapshot re-mines
@@ -160,7 +160,7 @@ def test_snapshot_reuses_tail_within_epoch():
         miner.ingest([0], [1], [t0 + 50 * i])
     snap = miner.snapshot()
     assert miner.tail_cache_misses == 2
-    expect = discover(_prefix_with_extra(g, miner, 50, i),
+    expect = batch_discover(_prefix_with_extra(g, miner, 50, i),
                       delta=delta, l_max=l_max, omega=omega)
     assert snap.counts == expect.counts
 

@@ -39,13 +39,13 @@ def test_distributed_mining_multi_device_exact():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax
-from repro.core import discover, oracle
+from repro.core import MiningConfig, PTMTEngine, oracle
 from repro.data import synthetic_graphs as sg
 
 g = sg.triadic_stream(1500, 40, seed=5)
 mesh = jax.make_mesh((8,), ("zones",))
-res = discover(g, delta=150, l_max=4, omega=4, mesh=mesh,
-               zone_axes=("zones",), zone_chunk=2)
+engine = PTMTEngine(MiningConfig(delta=150, l_max=4, omega=4, zone_chunk=2))
+res = engine.sharded(g, mesh, ("zones",))
 expect = dict(oracle.count_codes(g.u, g.v, g.t, 150, 4))
 keys = set(expect) | set(res.counts)
 bad = [k for k in keys if expect.get(k, 0) != res.counts.get(k, 0)]
@@ -75,12 +75,13 @@ def test_training_example_makes_progress():
 def test_pallas_backend_full_pipeline():
     """backend='pallas' through the public API on a real-ish stream."""
     code = """
-from repro.core import discover, discover_sequential
+from repro.core import MiningConfig, PTMTEngine
 from repro.data import synthetic_graphs as sg
 
 g = sg.bursty_stream(900, 14, seed=12)
-a = discover(g, delta=80, l_max=5, omega=4, backend="pallas")
-b = discover(g, delta=80, l_max=5, omega=4, backend="ref")
+cfg = MiningConfig(delta=80, l_max=5, omega=4, backend="pallas")
+a = PTMTEngine(cfg).discover(g)
+b = PTMTEngine(cfg.with_updates(backend="ref")).discover(g)
 assert a.counts == b.counts
 print("OK", len(a.counts))
 """

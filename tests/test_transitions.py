@@ -12,8 +12,8 @@ invariants are
 
 import pytest
 
-from repro.core import discover, transitions
-from conftest import random_graph
+from repro.core import transitions
+from conftest import batch_discover, random_graph
 
 KNOWN = {"01": 5, "0101": 3, "0102": 2, "010201": 1}
 
@@ -47,7 +47,7 @@ def test_build_tree_from_final_counts():
 @pytest.fixture(scope="module")
 def mined_tree():
     g = random_graph(7, 900, 10, 3_000)
-    res = discover(g, delta=25, l_max=4, omega=3)
+    res = batch_discover(g, delta=25, l_max=4, omega=3)
     assert res.overflow == 0
     return transitions.build_tree(res.counts), res
 
