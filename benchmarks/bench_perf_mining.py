@@ -252,15 +252,20 @@ def _fused_section(smoke: bool):
     """Fused single-launch scan vs the per-bucket dispatch loop.
 
     Same bursty corpus and bucketed layout; the fused path concatenates
-    every bucket into one flat slot stream and runs ONE ``pallas_call``
-    with the Phase-2 fold on-device, so candidate codes never round-trip
-    to host.  Counts must be identical.  Launch accounting comes from the
-    executor's metrics registry (``repro_mining_launches_total{path=...}``
-    counter deltas per mine plus the ``repro_mining_fused_*`` gauges) —
-    the same surface a scrape sees — and one ``RunOutcome.stats`` dict is
-    read to assert the two surfaces agree.  CI asserts
-    the fused path reports exactly one launch per mine and is no slower
-    than per-bucket.
+    every bucket into one flat slot stream and runs ONE launch with the
+    Phase-2 fold on-device, so candidate codes never round-trip to host.
+    Three modes: ``per_bucket`` (one launch per bucket), ``fused`` (the
+    ``"auto"``-dispatched lowering — the compiled xla formulation on CPU
+    hosts, the Pallas kernel where it compiles) and ``fused_interpret``
+    (the Pallas lowering pinned via ``fused_backend="pallas"`` — the old
+    interpret-mode baseline on CPU).  Counts must be identical across all
+    three.  Launch accounting comes from the executor's metrics registry
+    (``repro_mining_launches_total{path=...}`` counter deltas per mine
+    plus the ``repro_mining_fused_*`` gauges) — the same surface a scrape
+    sees — and one ``RunOutcome.stats`` dict is read to assert the two
+    surfaces agree.  CI asserts the fused path reports exactly one launch
+    per mine, resolves to the compiled ``fused_xla`` path on CPU, and is
+    no slower than the interpret baseline.
     """
     n_edges = 2_500 if smoke else 20_000
     g = sg.bursty_stream(n_edges, 250, burst_size=120, burst_span=200,
@@ -268,36 +273,52 @@ def _fused_section(smoke: bool):
     plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2)
     lay = tzp.build_zone_layout(g, plan, layout="bucketed")
     obs = obs_mod.enabled()
-    ex = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas", obs=obs)
+    ex_auto = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas",
+                             obs=obs)
+    ex_interp = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas",
+                               fused_backend="pallas", obs=obs)
 
     repeats = 2 if smoke else 3
     modes = {}
     counts_seen = {}
-    for name, fused, path in (("per_bucket", False, "per-bucket"),
-                              ("fused", True, "fused")):
+    for name, ex, fused in (("per_bucket", ex_auto, False),
+                            ("fused", ex_auto, True),
+                            ("fused_interpret", ex_interp, True)):
+        # probe run: compiles, and tells us which launch-counter label
+        # this executor's dispatch actually lands on
+        probe = ex.run_layout(lay, fused=fused).stats
+        path = probe["path"]
         launch_counter = obs.metrics.counter("repro_mining_launches_total",
                                              path=path)
         c0 = launch_counter.value
-        run = lambda fused=fused: transitions.device_counts_to_dict(
+        # the interpreter is orders of magnitude slower — one timed rep
+        # keeps the full suite's wall time bounded
+        reps = repeats if name != "fused_interpret" else (2 if smoke else 1)
+        run = lambda ex=ex, fused=fused: transitions.device_counts_to_dict(
             ex.run_layout(lay, fused=fused).counts)
-        counts, secs = timed(run, warmup=1, repeats=repeats)
+        counts, secs = timed(run, warmup=1, repeats=reps)
         counts_seen[name] = counts
         modes[name] = {
             "seconds": secs,
             "edges_per_s": g.n_edges / secs if secs else 0.0,
-            "launches": (launch_counter.value - c0) // (1 + repeats),
+            "launches": (launch_counter.value - c0) // (1 + reps),
+            "path": path,
+            "backend": probe.get("backend", "pallas"),
         }
     assert counts_seen["fused"] == counts_seen["per_bucket"], \
         "fused != per-bucket — differential bug"
+    assert counts_seen["fused"] == counts_seen["fused_interpret"], \
+        "compiled fused != pallas fused — differential bug"
     assert modes["fused"]["launches"] == 1
+    assert modes["fused_interpret"]["launches"] == 1
 
     gauge = lambda n: int(obs.metrics.gauge(n).value)
     spills = obs.metrics.find("repro_mining_spill_retries_total",
-                              path="fused")
+                              path=modes["fused"]["path"])
     # the registry mirrors the RunOutcome stats, never redefines them —
     # assert the two surfaces agree on the fused geometry
-    lrs = ex.run_layout(lay, fused=True).stats
-    assert (lrs["path"], lrs["launches"]) == ("fused", 1)
+    lrs = ex_auto.run_layout(lay, fused=True).stats
+    assert (lrs["path"], lrs["launches"]) == (modes["fused"]["path"], 1)
     assert lrs["merge_cap"] == gauge("repro_mining_fused_merge_cap")
     assert lrs["n_slots"] == gauge("repro_mining_fused_slots")
 
@@ -305,9 +326,14 @@ def _fused_section(smoke: bool):
         "edges": g.n_edges,
         "n_buckets": lay.n_buckets,
         "modes": modes,
+        "fused_path": modes["fused"]["path"],
+        "fused_backend": modes["fused"]["backend"],
+        "fused_bounds": lrs["bounds"],
         "launches_fused": modes["fused"]["launches"],
         "launches_per_bucket": modes["per_bucket"]["launches"],
         "edges_per_s_fused": modes["fused"]["edges_per_s"],
+        "edges_per_s_fused_interpret":
+            modes["fused_interpret"]["edges_per_s"],
         "edges_per_s_per_bucket": modes["per_bucket"]["edges_per_s"],
         "fold_chunk": gauge("repro_mining_fused_fold_chunk"),
         "merge_cap": gauge("repro_mining_fused_merge_cap"),
@@ -318,18 +344,26 @@ def _fused_section(smoke: bool):
         "speedup_fused_vs_per_bucket": (
             modes["per_bucket"]["seconds"] / modes["fused"]["seconds"]
             if modes["fused"]["seconds"] else 0.0),
+        "speedup_fused_vs_interpret": (
+            modes["fused_interpret"]["seconds"] / modes["fused"]["seconds"]
+            if modes["fused"]["seconds"] else 0.0),
     }
     rows = [
         csv_row(
             f"perf_mining/scan_{name}", m["seconds"],
-            f"edges_per_s={m['edges_per_s']:.0f};launches={m['launches']}",
+            f"edges_per_s={m['edges_per_s']:.0f};launches={m['launches']};"
+            f"path={m['path']}",
         )
         for name, m in modes.items()
     ]
     rows.append(csv_row(
         "perf_mining/fused_launch", 0.0,
         f"launches=1_vs_{payload['launches_per_bucket']};"
-        f"speedup={payload['speedup_fused_vs_per_bucket']:.2f}x;"
+        f"path={payload['fused_path']};"
+        f"speedup_vs_per_bucket="
+        f"{payload['speedup_fused_vs_per_bucket']:.2f}x;"
+        f"speedup_vs_interpret="
+        f"{payload['speedup_fused_vs_interpret']:.2f}x;"
         f"n_slots={payload['n_slots']};fold_chunk={payload['fold_chunk']}",
     ))
     return rows, payload

@@ -7,16 +7,20 @@ Two sections:
    (§Roofline of EXPERIMENTS.md is generated from this);
 2. **measured ragged sweep** — times the fused single-launch zone scan
    (``MiningExecutor.run_layout(fused=True)``) on bursty corpora of
-   increasing size, converts the layout-derived traffic model into
-   achieved bytes/s, and reports it as a fraction of a measured
-   streaming-bandwidth peak proxy (a jitted triad ``c = a + b``).  On CPU
-   the kernel runs in interpret mode, so treat the absolute fraction as a
-   trajectory smoke — the traffic model and the peak proxy are the pieces
-   that carry to real devices unchanged.
+   increasing size under BOTH fused lowerings side by side: the compiled
+   ``xla`` formulation (an achieved-vs-peak measurement — real XLA machine
+   code against a jitted triad ``c = a + b`` streaming peak proxy) and the
+   pinned Pallas path (which interprets on CPU — those points carry an
+   ``interpret_caveat`` and are trajectory smoke only).  Every point
+   records ``path``/``backend``/``compiled`` so a reader (or CI) can tell
+   which regime produced it, and a ``sweep_compaction`` section reports
+   how much modeled sweep traffic the host-planned live ``[lo, hi)``
+   bounds shave off the full plan.
 
 ``run_json`` returns a structured payload for
 ``benchmarks/run.py --out-json`` — the ``BENCH_roofline.json`` history.
-CI smoke-checks that the fused path reports exactly one launch per mine.
+CI smoke-checks that the fused path reports exactly one launch per mine
+and that at least one point ran compiled (no caveat).
 """
 
 from __future__ import annotations
@@ -25,7 +29,7 @@ import json
 import os
 import time
 
-from repro.core import MiningExecutor, encoding, transitions, tzp
+from repro.core import MiningExecutor, planner, transitions, tzp
 from repro.data import synthetic_graphs as sg
 
 from .common import csv_row
@@ -104,76 +108,119 @@ def _peak_bandwidth_proxy(mb: int = 32) -> float:
     return 3 * n * 4 / best
 
 
-def _fused_traffic_bytes(fl, l_max: int) -> int:
-    """Traffic model of one fused launch (int32 everywhere).
-
-    * chunk loads — each candidate block streams its ``hi - base`` slots
-      once (shared across the block's lanes): 5 arrays (u/v/t/valid/zid)
-      x 4 B x ``sweep_slots / blk`` slot-loads;
-    * lane loads — every slot is read once as a candidate lane
-      (t/valid/zid): 3 x 4 B x ``n_slots``;
-    * outputs — per-lane code limbs + length: ``(limbs + 1) x 4 B x
-      n_slots`` written by the kernel, read back by the on-device fold.
-    """
-    limbs = encoding.n_limbs(l_max)
-    chunk = (fl.sweep_slots // fl.blk) * 5 * 4
-    lanes = fl.n_slots * 3 * 4
-    out = fl.n_slots * (limbs + 1) * 4 * 2
-    return chunk + lanes + out
-
-
 def _ragged_sweep_section(smoke: bool):
+    from repro.kernels.common import resolve_interpret
+
     peak = _peak_bandwidth_proxy(8 if smoke else 32)
     sizes = ((1_500, 2_500) if smoke else (5_000, 20_000, 40_000))
-    ex = MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas")
-    rows, points = [], []
+    pallas_interprets = resolve_interpret(None, quiet=True)
+    # one executor per lowering: the compiled xla formulation vs the
+    # Pallas kernel (which interprets on CPU hosts)
+    executors = {
+        "xla": MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas",
+                              fused_backend="xla"),
+        "pallas": MiningExecutor(delta=DELTA, l_max=L_MAX, backend="pallas",
+                                 fused_backend="pallas"),
+    }
+    rows, points, compaction = [], [], []
+    by_size: dict[int, dict[str, float]] = {}
     for n_edges in sizes:
         g = sg.bursty_stream(n_edges, 250, burst_size=120, burst_span=200,
                              gap_span=30_000, seed=13)
         plan = tzp.plan_zones(g, delta=DELTA, l_max=L_MAX, omega=2)
         lay = tzp.build_zone_layout(g, plan, layout="bucketed")
-        outcome = ex.run_layout(lay, fused=True)      # warmup / compile
-        best = float("inf")
-        for _ in range(2 if smoke else 3):
-            t0 = time.perf_counter()
-            outcome = ex.run_layout(lay, fused=True)
-            best = min(best, time.perf_counter() - t0)
-        stats = dict(outcome.stats)
-        assert stats["launches"] == 1, stats
-        fl = tzp.concat_layout(lay, blk=ex.fused_blk,
-                               pad_slots_to=stats["fold_chunk"])
-        traffic = _fused_traffic_bytes(fl, L_MAX)
-        achieved = traffic / best if best else 0.0
-        point = {
+        for fb, ex in executors.items():
+            compiled = not (fb == "pallas" and pallas_interprets)
+            outcome = ex.run_layout(lay, fused=True)  # warmup / compile
+            # the interpreter is ~3 orders slower; one timed rep at the
+            # big sizes keeps the suite's wall time bounded
+            reps = 2 if smoke else (1 if not compiled and n_edges >= 20_000
+                                    else 3)
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                outcome = ex.run_layout(lay, fused=True)
+                best = min(best, time.perf_counter() - t0)
+            stats = dict(outcome.stats)
+            assert stats["launches"] == 1, stats
+            fl = tzp.concat_layout(lay, blk=ex.fused_blk,
+                                   pad_slots_to=stats["fold_chunk"],
+                                   delta=DELTA, l_max=L_MAX,
+                                   bounds=stats["bounds"])
+            assert fl.sweep_slots == stats["sweep_slots"], (fl.sweep_slots,
+                                                            stats)
+            traffic = planner.fused_traffic_bytes(fl, L_MAX)
+            achieved = traffic / best if best else 0.0
+            point = {
+                "edges": g.n_edges,
+                "path": stats["path"],
+                "backend": stats["backend"],
+                "bounds": stats["bounds"],
+                "compiled": compiled,
+                "n_buckets": lay.n_buckets,
+                "n_slots": fl.n_slots,
+                "sweep_slots": fl.sweep_slots,
+                "seconds": best,
+                "edges_per_s": g.n_edges / best if best else 0.0,
+                "traffic_bytes": traffic,
+                "achieved_bytes_per_s": achieved,
+                "fraction_of_peak": achieved / peak if peak else 0.0,
+                "launches": stats["launches"],
+                "motif_types": len(
+                    transitions.device_counts_to_dict(outcome.counts)),
+            }
+            if not compiled:
+                point["interpret_caveat"] = (
+                    "this point executed the Pallas kernel in interpret "
+                    "mode; its fraction is trajectory smoke only")
+            points.append(point)
+            by_size.setdefault(n_edges, {})[fb] = point["edges_per_s"]
+            rows.append(csv_row(
+                f"roofline/ragged_sweep/{fb}/e{n_edges}", best,
+                f"path={stats['path']};compiled={int(compiled)};"
+                f"achieved_gb_s={achieved/1e9:.3f};"
+                f"frac_of_peak={point['fraction_of_peak']:.4f};"
+                f"launches=1;slots={fl.n_slots}",
+            ))
+        # host-planned sweep compaction: modeled traffic, full vs live
+        full = tzp.concat_layout(lay, blk=executors["xla"].fused_blk)
+        live = tzp.concat_layout(lay, blk=executors["xla"].fused_blk,
+                                 delta=DELTA, l_max=L_MAX, bounds="live")
+        compaction.append({
             "edges": g.n_edges,
-            "n_buckets": lay.n_buckets,
-            "n_slots": fl.n_slots,
-            "sweep_slots": fl.sweep_slots,
-            "seconds": best,
-            "edges_per_s": g.n_edges / best if best else 0.0,
-            "traffic_bytes": traffic,
-            "achieved_bytes_per_s": achieved,
-            "fraction_of_peak": achieved / peak if peak else 0.0,
-            "launches": stats["launches"],
-            "motif_types": len(
-                transitions.device_counts_to_dict(outcome.counts)),
-        }
-        points.append(point)
+            "full_sweep_slots": full.sweep_slots,
+            "live_sweep_slots": live.sweep_slots,
+            "full_traffic_bytes": planner.fused_traffic_bytes(full, L_MAX),
+            "live_traffic_bytes": planner.fused_traffic_bytes(live, L_MAX),
+            "sweep_slots_saved_frac":
+                1.0 - live.sweep_slots / full.sweep_slots
+                if full.sweep_slots else 0.0,
+        })
         rows.append(csv_row(
-            f"roofline/ragged_sweep/e{n_edges}", best,
-            f"achieved_gb_s={achieved/1e9:.3f};"
-            f"frac_of_peak={point['fraction_of_peak']:.4f};"
-            f"launches=1;slots={fl.n_slots}",
+            f"roofline/sweep_compaction/e{n_edges}", 0.0,
+            f"full_slots={full.sweep_slots};live_slots={live.sweep_slots};"
+            f"saved_frac={compaction[-1]['sweep_slots_saved_frac']:.4f}",
         ))
     rows.append(csv_row(
         "roofline/peak_proxy", 0.0,
         f"triad_gb_s={peak/1e9:.2f}",
     ))
+    side_by_side = [
+        {
+            "edges": n_edges,
+            "compiled_edges_per_s": per_fb.get("xla", 0.0),
+            "interpret_edges_per_s": per_fb.get("pallas", 0.0),
+            "speedup": (per_fb["xla"] / per_fb["pallas"]
+                        if per_fb.get("pallas") else 0.0),
+        }
+        for n_edges, per_fb in sorted(by_size.items())
+        if pallas_interprets
+    ]
     payload = {
         "peak_proxy_bytes_per_s": peak,
-        "interpret_caveat": "CPU runs execute the kernel in interpret "
-                            "mode; fractions are trajectory smoke only",
         "points": points,
+        "compiled_vs_interpret": side_by_side,
+        "sweep_compaction": compaction,
     }
     return rows, payload
 

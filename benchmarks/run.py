@@ -11,7 +11,11 @@ catches suite-registry breakage without paying full benchmark cost.
 exposing ``run_json`` (mining: edges/sec + peak-memory estimates; roofline:
 ragged-sweep bandwidth; serving: multi-tenant latency + config-lattice
 co-mine comparison).  Payloads merge into an existing file by suite name,
-so ``BENCH_*.json`` accumulates across invocations instead of clobbering.
+so ``BENCH_*.json`` accumulates across invocations instead of clobbering;
+each invocation also appends a timestamped entry to a bounded ``history``
+list (suite names + argv + the per-suite payloads), so a perf regression
+can be traced to the run that introduced it instead of being silently
+overwritten by the latest numbers.
 """
 
 from __future__ import annotations
@@ -20,6 +24,7 @@ import argparse
 import inspect
 import json
 import sys
+import time
 import traceback
 
 from . import (
@@ -84,16 +89,27 @@ def main() -> None:
     if args.out_json:
         # merge into an existing BENCH file so suites written by separate
         # invocations (e.g. perf_mining then serving) accumulate instead
-        # of clobbering each other
+        # of clobbering each other; "suites" always holds the LATEST
+        # payload per suite (what CI asserts against) while "history"
+        # appends one timestamped entry per invocation so older numbers
+        # survive a re-run
         try:
             with open(args.out_json) as f:
                 existing = json.load(f)
             suites = dict(existing.get("suites", {}))
+            history = list(existing.get("history", []))
         except (FileNotFoundError, json.JSONDecodeError):
-            suites = {}
+            suites, history = {}, []
         suites.update(payloads)
+        history.append({
+            "at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+            "argv": sys.argv[1:],
+            "suites": payloads,
+        })
+        history = history[-50:]  # bound file growth
         with open(args.out_json, "w") as f:
-            json.dump({"argv": sys.argv[1:], "suites": suites},
+            json.dump({"argv": sys.argv[1:], "history": history,
+                       "suites": suites},
                       f, indent=1, sort_keys=True)
         print(f"json written to {args.out_json}", file=sys.stderr)
     if failures:

@@ -86,9 +86,11 @@ class BackendSpec:
     def fused_scan(self) -> Callable:
         """Resolve (and cache) the fused flat-stream scan callable.
 
-        Signature: ``fused_scan(u, v, t, valid, zone_id, hi, *, delta,
+        Signature: ``fused_scan(u, v, t, valid, zone_id, lo, hi, *, delta,
         l_max, blk) -> (code int32[S, L], length int32[S])`` over a
-        concatenated :class:`repro.core.tzp.FusedZoneLayout` slot stream.
+        concatenated :class:`repro.core.tzp.FusedZoneLayout` slot stream,
+        where ``lo``/``hi`` are the layout's per-candidate-block sweep
+        bounds (host-planned compaction).
         """
         if self.fused_loader is None:
             raise ValueError(
@@ -191,6 +193,12 @@ def _load_pallas_fused():
     return zone_ops.scan_flat
 
 
+def _load_xla_fused():
+    from repro.kernels.zone_scan import xla as zone_xla
+
+    return zone_xla.scan_flat_xla
+
+
 def _load_numpy():
     from repro.core import scan_numpy
 
@@ -224,6 +232,16 @@ register_backend(
     block_defaults=PALLAS_BLOCK_DEFAULTS,
     mem_model=_pallas_mem_model,
     fused_loader=_load_pallas_fused,
+    supports_comine=True,
+)
+
+register_backend(
+    "xla", _load_ref,
+    jittable=True, grade="reference",
+    description=("compiled XLA lowering: reference dense scan plus a pure "
+                 "lax fused flat scan (fast on CPU, no interpreter)"),
+    mem_model=_ref_mem_model,
+    fused_loader=_load_xla_fused,
     supports_comine=True,
 )
 

@@ -66,6 +66,11 @@ _CLI_HELP = {
              "in one bucket-native kernel launch (Phase-2 fold on-device) "
              "whenever the backend has a flat kernel, 'on' requires one, "
              "'off' keeps one launch per bucket",
+    "fused_backend": "which backend's flat kernel serves fused runs: "
+                     "'auto' keeps --backend except where Pallas would "
+                     "interpret (CPU), where the compiled 'xla' lowering "
+                     "takes over; an explicit name pins the lowering "
+                     "(must publish a fused kernel)",
 }
 
 
@@ -95,6 +100,7 @@ class MiningConfig:
     allow_overflow: bool = False
     zone_layout: str = "auto"
     fused: str = "auto"
+    fused_backend: str = "auto"
 
     def __post_init__(self):
         # frozen dataclass: normalize via object.__setattr__ before the
@@ -154,6 +160,12 @@ class MiningConfig:
         # resolves through the live registry so plugin backends validate
         # too; unknown names raise ValueError listing what is available
         backends.get_backend(self.backend)
+        if self.fused_backend != "auto" and \
+                not backends.get_backend(self.fused_backend).supports_fused:
+            raise ValueError(
+                f"fused_backend {self.fused_backend!r} has no fused "
+                f"single-launch scan; pick one that publishes a flat "
+                f"kernel (or leave it 'auto')")
         if self.zone_chunk is not None and self.memory_budget_mb is not None:
             # includes zone_chunk=0 ("explicitly unchunked") — any explicit
             # value beats the budget-derived chunk, so the budget is inert
@@ -242,6 +254,11 @@ class MiningConfig:
         parser.add_argument("--fused", default=defaults["fused"],
                             choices=list(FUSED_MODES),
                             help=_CLI_HELP["fused"])
+        parser.add_argument("--fused-backend",
+                            default=defaults["fused_backend"],
+                            choices=["auto",
+                                     *backends.available_backends()],
+                            help=_CLI_HELP["fused_backend"])
 
     @classmethod
     def from_cli_args(cls, args) -> "MiningConfig":

@@ -233,9 +233,10 @@ class PTMTEngine:
             counts, run_stats = self.executor.run_layout(
                 layout, allow_overflow=self.config.allow_overflow)
             sp.set(n_zones=plan.n_zones, path=run_stats.get("path"))
-        if run_stats.get("path") == "fused":
+        if str(run_stats.get("path", "")).startswith("fused"):
             # one launch, one executable: the whole layout resolves to a
-            # single fused execution key
+            # single fused execution key ("fused" or "fused_<backend>"
+            # when dispatch rerouted the kernel, e.g. "fused_xla" on CPU)
             self._note_execution(keys[0], layout.n_zones)
             self.stats.fused_runs += 1
         else:
@@ -310,7 +311,7 @@ class PTMTEngine:
                      for k in ex.layout_execution_keys(layout))
         counts_tuple, run_stats = ex.run_layout_multi(
             layout, params, allow_overflow=dom.allow_overflow)
-        if run_stats.get("path") == "fused-multi":
+        if str(run_stats.get("path", "")).startswith("fused"):
             self._note_execution(keys[0], layout.n_zones)
             self.stats.fused_runs += 1
         else:

@@ -67,7 +67,7 @@ from repro.obs import get_obs
 
 from . import aggregation, backends, encoding, expansion, planner
 from .aggregation import CodeCounts
-from .tzp import (ZoneBatch, ZoneBatchLayout, concat_layout,
+from .tzp import (FUSED_BOUNDS, ZoneBatch, ZoneBatchLayout, concat_layout,
                   pad_zone_arrays)
 
 AGG_MODES = ("auto", "legacy", "hierarchical", "pipelined")
@@ -285,18 +285,19 @@ def _pipeline_step(carry, spilled, u, v, t, valid, signs, *, delta, l_max,
     static_argnames=("delta", "l_max", "scan", "blk", "fold_chunk",
                      "merge_cap"),
 )
-def _mine_fused_jit(u, v, t, valid, zone_id, sign, hi, *, delta, l_max,
+def _mine_fused_jit(u, v, t, valid, zone_id, sign, lo, hi, *, delta, l_max,
                     scan, blk, fold_chunk, merge_cap):
     """Jitted fused path: single-launch flat scan + on-device Phase-2 fold.
 
     One executable does the whole mine: the bucket-native kernel sweeps
-    every zone of the concatenated layout in a single ``pallas_call``, and
-    the candidate codes fold straight through ``count_codes`` +
+    every zone of the concatenated layout in a single launch, and the
+    candidate codes fold straight through ``count_codes`` +
     ``merge_bounded`` in ``fold_chunk``-row slices inside the same jit —
     only the bounded ``CodeCounts`` table and the spill counter leave the
-    device.  The [S, L] code block never round-trips to host.
+    device.  The [S, L] code block never round-trips to host.  ``scan``
+    is a static arg, so the Pallas and XLA lowerings compile separately.
     """
-    code, length = scan(u, v, t, valid, zone_id, hi,
+    code, length = scan(u, v, t, valid, zone_id, lo, hi,
                         delta=delta, l_max=l_max, blk=blk)
     s, limbs = code.shape
     w = (length > 0).astype(jnp.int32) * sign
@@ -399,8 +400,8 @@ def _mine_multi_jit(u, v, t, valid, signs, *, delta, l_max, scan, zone_chunk,
     static_argnames=("delta", "l_max", "scan", "blk", "fold_chunk",
                      "params", "merge_caps"),
 )
-def _mine_fused_multi_jit(u, v, t, valid, zone_id, sign, hi, *, delta, l_max,
-                          scan, blk, fold_chunk, params, merge_caps):
+def _mine_fused_multi_jit(u, v, t, valid, zone_id, sign, lo, hi, *, delta,
+                          l_max, scan, blk, fold_chunk, params, merge_caps):
     """Jitted fused co-mine: ONE flat kernel launch, N on-device folds.
 
     The single-launch analog of :func:`_mine_multi_jit`: the dominating
@@ -409,7 +410,7 @@ def _mine_fused_multi_jit(u, v, t, valid, zone_id, sign, hi, *, delta, l_max,
     through its own ``count_codes`` + ``merge_bounded`` fold inside the
     same executable.
     """
-    code, length, ts = scan(u, v, t, valid, zone_id, hi,
+    code, length, ts = scan(u, v, t, valid, zone_id, lo, hi,
                             delta=delta, l_max=l_max, blk=blk, with_ts=True)
     s, limbs = code.shape
     nchunk = s // fold_chunk
@@ -472,19 +473,33 @@ class MiningExecutor:
         device-memory budget via :mod:`repro.core.planner` whenever
         ``zone_chunk`` was not given explicitly.
       fused: single-launch dispatch policy for :meth:`run_layout` —
-        "auto" (default) fuses whenever the backend publishes a
-        bucket-native flat kernel, "on" requires one, "off" keeps the
-        per-bucket path.  A per-call ``run_layout(fused=...)`` override
-        beats the policy.
+        "auto" (default) fuses whenever the resolved fused backend
+        publishes a bucket-native flat kernel, "on" requires one, "off"
+        keeps the per-bucket path.  A per-call ``run_layout(fused=...)``
+        override beats the policy.
+      fused_backend: which backend's flat kernel serves fused runs —
+        "auto" (default) keeps this executor's backend except on hosts
+        where the Pallas kernel would run in *interpret* mode (CPU), where
+        the compiled ``xla`` lowering takes over; an explicit registry
+        name pins the lowering (e.g. ``"pallas"`` for the differential
+        oracle, ``"xla"`` to force the compiled path from any backend).
+      fused_bounds: sweep-bound planning for the fused flat stream —
+        "live" (default) tightens each candidate block's ``[lo, hi)``
+        window to the Lemma-4.1 horizon cut (see
+        :func:`repro.core.tzp.concat_layout`), "full" sweeps to each
+        block's zone end.  Output-identical; "live" is strictly less
+        dispatched work.
 
     :meth:`run_layout`/:meth:`run_fused` return a :class:`RunOutcome`
     whose ``stats`` describes the dispatch that produced the counts:
-    ``path`` ("fused"/"per-bucket"/their ``-multi`` co-mine variants),
-    ``launches`` (scan dispatches in the final successful attempt — 1 for
-    fused, one per bucket otherwise) and ``spill_retries`` (merge-cap
-    doublings, each re-running the launch).  The old ``last_run_stats``
-    attribute — shared mutable state that misattributed under concurrent
-    runs — is removed; stats travel only on the returned outcome.
+    ``path`` ("fused" — suffixed ``fused_<name>`` when the fused kernel
+    came from a different backend than the executor's, e.g. "fused_xla" —
+    "per-bucket", and their ``-multi`` co-mine variants), ``launches``
+    (scan dispatches in the final successful attempt — 1 for fused, one
+    per bucket otherwise) and ``spill_retries`` (merge-cap doublings,
+    each re-running the launch).  The old ``last_run_stats`` attribute —
+    shared mutable state that misattributed under concurrent runs — is
+    removed; stats travel only on the returned outcome.
     """
 
     def __init__(
@@ -499,6 +514,8 @@ class MiningExecutor:
         merge_cap: int | None = None,
         memory_budget_mb: float | None = None,
         fused: str = "auto",
+        fused_backend: str = "auto",
+        fused_bounds: str = "live",
         obs=None,
     ):
         if pad_policy not in ("pad", "raise"):
@@ -508,6 +525,16 @@ class MiningExecutor:
         if fused not in FUSED_MODES:
             raise ValueError(
                 f"unknown fused mode {fused!r}; one of {FUSED_MODES}")
+        if fused_bounds not in FUSED_BOUNDS:
+            raise ValueError(
+                f"unknown fused bounds {fused_bounds!r}; one of "
+                f"{FUSED_BOUNDS}")
+        if fused_backend != "auto" and \
+                not backends.get_backend(fused_backend).supports_fused:
+            raise ValueError(
+                f"fused_backend {fused_backend!r} has no fused "
+                f"single-launch scan; pick one that publishes a flat "
+                f"kernel (or leave it 'auto')")
         self.delta = int(delta)
         self.l_max = int(l_max)
         self.spec = backends.get_backend(backend)
@@ -524,8 +551,18 @@ class MiningExecutor:
         self.merge_cap = int(merge_cap) if merge_cap else None
         self.memory_budget_mb = memory_budget_mb
         self.fused = fused
+        self.fused_backend = fused_backend
+        self.fused_bounds = fused_bounds
         self.fused_blk = backends.FUSED_BLK_DEFAULT
         self._plan_cache: dict[tuple, object] = {}
+        # spill-adapted fused merge caps, keyed by fold_chunk: once a
+        # fused run spills and retries at a larger cap, later runs with
+        # the same fold geometry start from that cap directly instead of
+        # re-paying the spilled launch (and its recompile) every call.
+        # Only consulted when no explicit merge_cap pins the table size;
+        # like _plan_cache, a racy lost update under concurrent use is
+        # benign (one extra adaptive retry, never a wrong count).
+        self._fused_cap_adapt: dict[int, int] = {}
         # observability bundle: NULL_OBS by default (shared no-op
         # singletons), so the hot paths below emit unconditionally
         self.obs = get_obs(obs)
@@ -544,6 +581,7 @@ class MiningExecutor:
             merge_cap=config.merge_cap,
             memory_budget_mb=config.memory_budget_mb,
             fused=getattr(config, "fused", "auto"),
+            fused_backend=getattr(config, "fused_backend", "auto"),
             obs=obs,
         )
 
@@ -735,25 +773,62 @@ class MiningExecutor:
         return self.run_arrays(batch.u, batch.v, batch.t, batch.valid,
                                batch.sign, label=batch.label)
 
+    def _fused_spec(self) -> backends.BackendSpec:
+        """The backend whose flat kernel serves this executor's fused runs.
+
+        An explicit ``fused_backend`` pins it (validated at construction).
+        ``"auto"`` keeps this executor's own backend, except when that
+        backend is an accelerator kernel (Pallas) that would execute in
+        *interpret* mode on this host (CPU) — there the compiled ``xla``
+        lowering is strictly faster at identical output, so it takes over.
+        Pallas stays the lowering on real accelerators and the
+        differential oracle everywhere (pin ``fused_backend="pallas"``).
+        """
+        if self.fused_backend != "auto":
+            return backends.get_backend(self.fused_backend)
+        spec = self.spec
+        if spec.supports_fused and spec.grade == "accelerator":
+            from repro.kernels.common import resolve_interpret
+
+            if resolve_interpret(None, quiet=True):
+                try:
+                    xla = backends.get_backend("xla")
+                except ValueError:
+                    return spec
+                if xla.supports_fused:
+                    return xla
+        return spec
+
+    def _fused_path(self, suffix: str = "") -> str:
+        """Stats ``path`` label: "fused" when the executor's own backend
+        ran the kernel, "fused_<name>" when dispatch rerouted it."""
+        fspec = self._fused_spec()
+        base = "fused" if fspec.name == self.backend else \
+            f"fused_{fspec.name}"
+        return base + suffix
+
     def resolve_fused(self, fused: bool | None = None) -> bool:
         """Resolve the fused-dispatch decision for a layout run.
 
         A per-call boolean beats the constructor policy; ``True`` (or
-        policy "on") on a backend without a flat kernel raises rather than
+        policy "on") when no fused kernel resolves raises rather than
         silently falling back — the caller asked for one launch and would
-        otherwise benchmark the wrong path.
+        otherwise benchmark the wrong path.  The decision consults the
+        *resolved* fused backend (:meth:`_fused_spec`), so e.g.
+        ``backend="ref", fused_backend="xla"`` takes the fused path even
+        though the reference backend has no flat kernel of its own.
         """
         if fused is None:
             if self.fused == "off":
                 return False
             if self.fused == "auto":
-                return self.spec.supports_fused
+                return self._fused_spec().supports_fused
             fused = True
-        if fused and not self.spec.supports_fused:
+        if fused and not self._fused_spec().supports_fused:
             raise ValueError(
                 f"backend {self.backend!r} has no fused single-launch "
                 f"scan; use fused=False (or fused='off') for the "
-                f"per-bucket path")
+                f"per-bucket path, or pick a fused_backend that has one")
         return bool(fused)
 
     def run_layout(self, layout: ZoneBatchLayout, *,
@@ -832,21 +907,30 @@ class MiningExecutor:
     def _fused_merge_cap(self, fold_chunk: int) -> int:
         if self.merge_cap:
             return self.merge_cap
-        if self.spec.default_merge_cap:
-            return self.spec.default_merge_cap
-        return max(1024, fold_chunk)
+        base = self.spec.default_merge_cap or max(1024, fold_chunk)
+        return max(base, self._fused_cap_adapt.get(fold_chunk, 0))
+
+    def _note_fused_cap(self, fold_chunk: int, cap: int,
+                        retries: int) -> None:
+        """Remember a spill-adapted cap so the NEXT run starts there."""
+        if retries and not self.merge_cap:
+            prev = self._fused_cap_adapt.get(fold_chunk, 0)
+            self._fused_cap_adapt[fold_chunk] = max(prev, cap)
 
     def fused_execution_key(self, layout: ZoneBatchLayout) -> tuple:
         """The compile-cache key a fused layout run resolves to.
 
         The fused analog of :meth:`execution_key`: the jitted executable
         is keyed on the flat stream geometry (padded slot count + block
-        size) and the fold shape, not on per-bucket shapes — two layouts
-        that concatenate to the same stream reuse one executable.
+        size), the fold shape, the resolved fused backend (Pallas and XLA
+        lowerings compile separately — ``scan`` is a jit static), and the
+        sweep-bounds mode (full and live plans ship different descriptor
+        contents under the same shapes).
         """
         blk, fold_chunk, s_pad = self._fused_geometry(layout)
         merge_cap = min(self._fused_merge_cap(fold_chunk), s_pad + 1)
-        return ("fused", self.backend, self.delta, self.l_max, s_pad, blk,
+        return ("fused", self.backend, self._fused_spec().name,
+                self.fused_bounds, self.delta, self.l_max, s_pad, blk,
                 fold_chunk, merge_cap)
 
     def run_fused(self, layout: ZoneBatchLayout, *,
@@ -864,36 +948,44 @@ class MiningExecutor:
         """
         self.check_layout_overflow(layout, allow_overflow=allow_overflow)
         obs = self.obs
+        fspec = self._fused_spec()
+        path = self._fused_path()
         blk, fold_chunk, _ = self._fused_geometry(layout)
-        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk)
+        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk,
+                           delta=self.delta, l_max=self.l_max,
+                           bounds=self.fused_bounds)
         cap_ceiling = fl.n_slots + 1
         merge_cap = min(self._fused_merge_cap(fold_chunk), cap_ceiling)
         with obs.tracer.span("mine.h2d", n_slots=fl.n_slots) as sp:
             arrays = tuple(jnp.asarray(x) for x in (
-                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.lo,
+                fl.hi))
             sp.sync(arrays)
         retries = 0
         while True:
             # one span per launch attempt; the compile key changes when a
             # spill retry doubles merge_cap (a genuine recompile), so the
             # tracer's compile-vs-exec attribution stays honest
-            ck = ("fused", self.backend, self.delta, self.l_max,
-                  fl.n_slots, blk, fold_chunk, merge_cap) \
+            ck = ("fused", self.backend, fspec.name, fl.bounds, self.delta,
+                  self.l_max, fl.n_slots, blk, fold_chunk, merge_cap) \
                 if obs.enabled else None
             with obs.tracer.span("mine.fused", n_slots=fl.n_slots,
                                  merge_cap=merge_cap, retry=retries,
                                  compile_key=ck) as sp:
                 counts, spilled = _mine_fused_jit(
                     *arrays, delta=self.delta, l_max=self.l_max,
-                    scan=self.spec.fused_scan, blk=blk,
+                    scan=fspec.fused_scan, blk=blk,
                     fold_chunk=fold_chunk, merge_cap=merge_cap,
                 )
                 sp.sync((counts, spilled))
             with obs.tracer.span("mine.d2h"):
                 n_spilled = int(spilled)
             if n_spilled == 0:
+                self._note_fused_cap(fold_chunk, merge_cap, retries)
                 stats = {
-                    "path": "fused",
+                    "path": path,
+                    "backend": fspec.name,
+                    "bounds": fl.bounds,
                     "launches": 1,
                     "spill_retries": retries,
                     "merge_cap": merge_cap,
@@ -902,7 +994,7 @@ class MiningExecutor:
                     "sweep_slots": fl.sweep_slots,
                 }
                 obs.metrics.counter("repro_mining_launches_total",
-                                    path="fused").inc()
+                                    path=path).inc()
                 m = obs.metrics
                 m.gauge("repro_mining_fused_merge_cap").set(merge_cap)
                 m.gauge("repro_mining_fused_fold_chunk").set(fold_chunk)
@@ -1011,14 +1103,19 @@ class MiningExecutor:
         params = self._check_comine_params(params)
         self.check_layout_overflow(layout, allow_overflow=allow_overflow)
         obs = self.obs
+        fspec = self._fused_spec()
+        path = self._fused_path("-multi")
         blk, fold_chunk, _ = self._fused_geometry(layout)
-        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk)
+        fl = concat_layout(layout, blk=blk, pad_slots_to=fold_chunk,
+                           delta=self.delta, l_max=self.l_max,
+                           bounds=self.fused_bounds)
         cap_ceiling = fl.n_slots + 1
         caps = [min(self._fused_merge_cap(fold_chunk), cap_ceiling)
                 for _ in params]
         with obs.tracer.span("mine.h2d", n_slots=fl.n_slots) as sp:
             arrays = tuple(jnp.asarray(x) for x in (
-                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.hi))
+                fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.sign, fl.lo,
+                fl.hi))
             sp.sync(arrays)
         retries = 0
         while True:
@@ -1026,7 +1123,7 @@ class MiningExecutor:
                                  n_configs=len(params), retry=retries) as sp:
                 out = _mine_fused_multi_jit(
                     *arrays, delta=self.delta, l_max=self.l_max,
-                    scan=self.spec.fused_scan, blk=blk,
+                    scan=fspec.fused_scan, blk=blk,
                     fold_chunk=fold_chunk, params=params,
                     merge_caps=tuple(caps),
                 )
@@ -1034,8 +1131,11 @@ class MiningExecutor:
             with obs.tracer.span("mine.d2h"):
                 spills = [int(sp_i) for _, sp_i in out]
             if not any(spills):
+                self._note_fused_cap(fold_chunk, max(caps), retries)
                 stats = {
-                    "path": "fused-multi",
+                    "path": path,
+                    "backend": fspec.name,
+                    "bounds": fl.bounds,
                     "launches": 1,
                     "spill_retries": retries,
                     "merge_caps": tuple(caps),
@@ -1045,7 +1145,7 @@ class MiningExecutor:
                     "n_configs": len(params),
                 }
                 obs.metrics.counter("repro_mining_launches_total",
-                                    path="fused-multi").inc()
+                                    path=path).inc()
                 return MultiRunOutcome(
                     counts=tuple(c for c, _ in out), stats=stats)
             for i, n_spilled in enumerate(spills):

@@ -121,9 +121,14 @@ def fused_peak_bytes(n_slots: int, l_max: int, *, fold_chunk: int,
 
 def default_fold_chunk(n_slots: int, *, blk: int) -> int:
     """Fold-chunk default: ~4096 candidate rows per on-device fold step,
-    rounded to a ``blk`` multiple and clamped to the (blk-aligned) stream
+    scaled up (to at most 16384) once the stream is large enough that the
+    sequential merge chain would dominate — every fold step pays an
+    O(merge_cap) bounded merge regardless of chunk size, so a big stream
+    folded in 4096-row steps spends more time merging than scanning.
+    Rounded to a ``blk`` multiple and clamped to the (blk-aligned) stream
     so tiny layouts do not pad up to a chunk they cannot fill."""
-    target = max(blk, 4096 // blk * blk)
+    scaled = min(16384, n_slots // 8) // blk * blk
+    target = max(blk, 4096 // blk * blk, scaled)
     slots = max(-(-max(n_slots, 1) // blk) * blk, blk)
     return min(target, slots)
 
@@ -289,6 +294,40 @@ def padded_sweep_slots(bucket_shapes) -> int:
     (EXPERIMENTS.md §Zone batch layout).
     """
     return sum(int(z) * int(e) ** 2 for z, e in bucket_shapes)
+
+
+def fused_sweep_slots(lo, hi, blk: int) -> int:
+    """Dispatched sweep work of a fused flat stream: each candidate block
+    of ``blk`` lanes streams its ``[lo, hi)`` window once, so the slot-cell
+    cost is ``blk * sum(hi - lo)``.
+
+    The fused analog of :func:`padded_sweep_slots`, and the quantity
+    host-planned compaction attacks: tightening ``hi`` to the Lemma-4.1
+    horizon cut (``tzp.concat_layout(bounds="live")``) shrinks this model
+    directly, and with it the compiled kernel's chunk traffic below.
+    """
+    return int(blk) * int(sum(int(h) - int(l) for l, h in zip(lo, hi)))
+
+
+def fused_traffic_bytes(fl, l_max: int) -> int:
+    """Traffic model of one fused launch (int32 everywhere).
+
+    * chunk loads — each candidate block streams its ``hi - lo`` window
+      once (shared across the block's lanes): 5 arrays (u/v/t/valid/zid)
+      x 4 B x ``sweep_slots / blk`` slot-loads;
+    * lane loads — every slot is read once as a candidate lane
+      (t/valid/zid): 3 x 4 B x ``n_slots``;
+    * outputs — per-lane code limbs + length: ``(limbs + 1) x 4 B x
+      n_slots`` written by the kernel, read back by the on-device fold.
+
+    ``fl`` is a :class:`repro.core.tzp.FusedZoneLayout`; the roofline
+    benchmark divides this by measured wall time for achieved bytes/s.
+    """
+    limbs = encoding.n_limbs(l_max)
+    chunk = (fl.sweep_slots // fl.blk) * 5 * 4
+    lanes = fl.n_slots * 3 * 4
+    out = fl.n_slots * (limbs + 1) * 4 * 2
+    return chunk + lanes + out
 
 
 # ---------------------------------------------------------------------------

@@ -479,11 +479,17 @@ class FusedZoneLayout:
     concatenated into flat ``int32[S]`` arrays (``S`` rounded up to a
     multiple of ``blk``), so a *single* kernel launch can sweep the whole
     ragged layout: candidate blocks of ``blk`` lanes tile the stream and
-    the per-block ``hi`` descriptor bounds each block's sweep to the flat
-    span of the zones its lanes belong to.  ``zone_id`` (the global zone
-    row per slot, -1 for stream padding) gates the kernel's edge updates
-    to same-zone pairs, and ``sign`` carries each slot's Lemma-4.2 sign so
-    the on-device fold can weight candidates without a host gather.
+    the per-block ``[lo, hi)`` descriptors bound each block's sweep to the
+    flat span of the zones its lanes belong to.  ``zone_id`` (the global
+    zone row per slot, -1 for stream padding) gates the kernel's edge
+    updates to same-zone pairs, and ``sign`` carries each slot's Lemma-4.2
+    sign so the on-device fold can weight candidates without a host gather.
+
+    ``bounds`` records how ``hi`` was planned: ``"full"`` sweeps each
+    block to the blk-aligned end of its lanes' zones, ``"live"`` stops at
+    the blk-aligned Lemma-4.1 horizon cut (no lane in the block can absorb
+    an edge past ``t_seed + l_max * delta``) and skips candidate blocks
+    with no valid lane outright (``lo == hi``).
     """
 
     u: np.ndarray         # int32[S] flat edge endpoints
@@ -492,12 +498,14 @@ class FusedZoneLayout:
     valid: np.ndarray     # int32[S] real-edge mask
     zone_id: np.ndarray   # int32[S] owning zone row (-1 = stream pad)
     sign: np.ndarray      # int32[S] zone sign per slot (0 on pad)
+    lo: np.ndarray        # int32[S // blk] blk-aligned sweep start per block
     hi: np.ndarray        # int32[S // blk] blk-aligned sweep end per block
     blk: int
     kind: str                                   # source layout kind
     bucket_shapes: tuple[tuple[int, int], ...]  # source (Z_b, e_cap_b)
     n_zones: int                                # real zones in the stream
     overflow: int
+    bounds: str = "full"                        # sweep-bound planning mode
 
     @property
     def n_slots(self) -> int:
@@ -514,19 +522,29 @@ class FusedZoneLayout:
     @property
     def sweep_slots(self) -> int:
         """Padded pairwise sweep work actually dispatched: each candidate
-        block sweeps ``hi - base`` slots (before live-window skipping).
-        The fused analog of :attr:`ZoneBatchLayout.sweep_slots`."""
-        bases = np.arange(self.n_blocks, dtype=np.int64) * self.blk
-        return int(self.blk * (self.hi.astype(np.int64) - bases).sum())
+        block sweeps ``hi - lo`` slots (before chunk-level live skipping).
+        The fused analog of :attr:`ZoneBatchLayout.sweep_slots`; one
+        formula, owned by the planner
+        (:func:`repro.core.planner.fused_sweep_slots`)."""
+        from . import planner
+
+        return planner.fused_sweep_slots(self.lo, self.hi, self.blk)
 
     def signature(self) -> tuple:
-        """Compile-cache geometry: one jitted executable per signature."""
-        return (self.kind, self.bucket_shapes, self.n_slots, self.blk)
+        """Compile-cache geometry: one jitted executable per signature.
+
+        ``bounds`` is part of the key — full and live plans dispatch the
+        same shapes but different descriptor contents, and the engine
+        keys compile/stat caches per (backend, layout, bounds).
+        """
+        return (self.kind, self.bucket_shapes, self.n_slots, self.blk,
+                self.bounds)
 
     def summary(self) -> dict:
         """JSON-able description (benchmarks, ``engine.stats``)."""
         return {
             "kind": f"fused-{self.kind}",
+            "bounds": self.bounds,
             "n_zones": self.n_zones,
             "n_slots": self.n_slots,
             "blk": self.blk,
@@ -537,8 +555,14 @@ class FusedZoneLayout:
         }
 
 
+#: Sweep-bound planning modes for :func:`concat_layout`.
+FUSED_BOUNDS = ("full", "live")
+
+
 def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
-                  pad_slots_to: int | None = None) -> FusedZoneLayout:
+                  pad_slots_to: int | None = None,
+                  delta: int | None = None, l_max: int | None = None,
+                  bounds: str = "full") -> FusedZoneLayout:
     """Flatten a (dense or bucketed) layout into a fused slot stream.
 
     Buckets are visited in layout order (ascending capacity) and only real
@@ -549,14 +573,35 @@ def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
     chunk so the count fold tiles evenly); padding slots carry ``valid=0``,
     ``zone_id=-1``, ``sign=0``.
 
-    ``hi[i]`` is the blk-aligned end of the last zone any of block ``i``'s
-    lanes belongs to: a lane's extensions can only come from later slots of
-    its own zone row (earlier same-zone edges are not strictly later in
-    time, so they can neither extend nor time out the candidate), hence
-    sweeping ``[i*blk, hi[i])`` is exact.
+    ``bounds="full"``: ``hi[i]`` is the blk-aligned end of the last zone
+    any of block ``i``'s lanes belongs to — a lane's extensions can only
+    come from later slots of its own zone row (earlier same-zone edges are
+    not strictly later in time, so they can neither extend nor time out
+    the candidate), hence sweeping ``[i*blk, hi[i])`` is exact.
+
+    ``bounds="live"`` (requires ``delta``/``l_max``): tighten ``hi[i]`` to
+    the blk-aligned Lemma-4.1 horizon cut.  A candidate seeded at ``t0``
+    extends only through edges with ``t <= t0 + l_max * delta`` (after
+    ``k`` extensions ``last_t <= t0 + k * delta``, and an extension needs
+    ``t <= last_t + delta`` with ``length < l_max``); zone rows are
+    time-sorted, so one ``searchsorted`` per valid slot places its cut
+    exactly.  Edges past the cut can only set the candidate's ``done``
+    flag, which never feeds the ``code``/``length``/``ts`` outputs, so the
+    compacted sweep is output-identical to the full one.  Blocks with no
+    valid lane get ``hi == lo`` (zero chunks dispatched).  ``lo[i]`` is
+    ``i * blk`` in both modes: seeding lane ``q`` requires sweeping slot
+    ``q`` itself, and every cut is ``>= q + 1``, so a live block's window
+    always covers its own chunk.
     """
     if blk < 1:
         raise ValueError(f"blk must be >= 1, got {blk}")
+    if bounds not in FUSED_BOUNDS:
+        raise ValueError(
+            f"unknown fused sweep bounds {bounds!r}; one of {FUSED_BOUNDS}")
+    if bounds == "live" and (delta is None or l_max is None):
+        raise ValueError(
+            "bounds='live' needs delta and l_max to place the Lemma-4.1 "
+            "horizon cut")
     mult = blk
     if pad_slots_to:
         if pad_slots_to % blk:
@@ -565,8 +610,9 @@ def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
                 f"blk {blk}")
         mult = pad_slots_to
 
+    horizon = int(delta) * int(l_max) if bounds == "live" else 0
     chunks_u, chunks_v, chunks_t, chunks_valid = [], [], [], []
-    chunks_zid, chunks_sign, row_ends = [], [], []
+    chunks_zid, chunks_sign, row_ends, live_ends = [], [], [], []
     zone_row = 0
     pos = 0
     for b in layout.buckets:
@@ -579,8 +625,20 @@ def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
             chunks_valid.append(b.valid[r])
             chunks_zid.append(np.full(cap, zone_row, np.int32))
             chunks_sign.append(np.full(cap, b.sign[r], np.int32))
+            row_start = pos
             pos += cap
             row_ends.append(np.full(cap, pos, np.int64))
+            if bounds == "live":
+                # per-slot horizon cut (int64 guards t + horizon overflow);
+                # invalid slots contribute 0 — they seed nothing, so they
+                # constrain no block's window
+                cnt = int(b.valid[r].sum())
+                cuts = np.zeros(cap, np.int64)
+                if cnt:
+                    st = b.t[r][:cnt].astype(np.int64)
+                    cuts[:cnt] = row_start + np.searchsorted(
+                        st, st + horizon, side="right")
+                live_ends.append(cuts)
             zone_row += 1
 
     s = pos
@@ -608,14 +666,26 @@ def concat_layout(layout: ZoneBatchLayout, *, blk: int = 512,
             [slot_end, np.arange(s, s_pad, dtype=np.int64) + 1])
 
     n_blocks = s_pad // blk
-    hi = slot_end.reshape(n_blocks, blk).max(axis=1)
-    hi = (hi + blk - 1) // blk * blk
+    bases = np.arange(n_blocks, dtype=np.int64) * blk
+    if bounds == "live":
+        live = np.concatenate(live_ends).astype(np.int64) if live_ends \
+            else np.zeros(0, np.int64)
+        if pad:
+            live = np.concatenate([live, np.zeros(pad, np.int64)])
+        cut = live.reshape(n_blocks, blk).max(axis=1)
+        hi = (cut + blk - 1) // blk * blk
+        # blocks with no valid lane dispatch zero chunks (their lanes seed
+        # nothing and the fold zero-weights length-0 candidates)
+        hi = np.where(cut > 0, hi, bases)
+    else:
+        hi = slot_end.reshape(n_blocks, blk).max(axis=1)
+        hi = (hi + blk - 1) // blk * blk
 
     return FusedZoneLayout(
         u=u, v=v, t=t, valid=valid, zone_id=zone_id, sign=sign,
-        hi=hi.astype(np.int32), blk=blk, kind=layout.kind,
-        bucket_shapes=layout.bucket_shapes(), n_zones=zone_row,
-        overflow=layout.overflow,
+        lo=bases.astype(np.int32), hi=hi.astype(np.int32), blk=blk,
+        kind=layout.kind, bucket_shapes=layout.bucket_shapes(),
+        n_zones=zone_row, overflow=layout.overflow, bounds=bounds,
     )
 
 

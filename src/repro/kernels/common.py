@@ -16,11 +16,22 @@ heuristic, so a single env var flips the whole kernel suite:
 
 An explicit ``interpret=`` argument at a call site still beats the env
 var — explicit beats derived everywhere in this codebase.
+
+The *silent* arm of the heuristic (unset/``auto`` on CPU) is a perf
+footgun: the interpreter is orders of magnitude slower than a compiled
+lowering, and nothing used to say it was active.  The first silent
+fallback per process now emits one ``RuntimeWarning`` plus a
+``repro_kernel_interpret_fallbacks_total`` counter tick (every fallback
+counts; only the warning is once-per-process).  Explicit requests —
+``interpret=True`` or the env var — are intentional and never warn, and
+test runs (``PYTEST_CURRENT_TEST`` set) stay quiet: differential tests
+pin interpret mode on purpose.
 """
 
 from __future__ import annotations
 
 import os
+import warnings
 
 import jax
 
@@ -31,9 +42,37 @@ INTERPRET_ENV = "REPRO_PALLAS_INTERPRET"
 _TRUE = ("1", "true", "yes", "on")
 _FALSE = ("0", "false", "no", "off")
 
+_fallback_warned = False
 
-def resolve_interpret(interpret: bool | None = None) -> bool:
-    """Resolve a kernel's interpret-mode flag (see module docstring)."""
+
+def _note_interpret_fallback() -> None:
+    global _fallback_warned
+    from repro.obs import global_obs
+
+    global_obs().metrics.counter(
+        "repro_kernel_interpret_fallbacks_total").inc()
+    if _fallback_warned or "PYTEST_CURRENT_TEST" in os.environ:
+        return
+    _fallback_warned = True
+    warnings.warn(
+        "no compiled Pallas lowering for this host (default backend is "
+        "cpu): kernels will run in INTERPRET mode, which is orders of "
+        "magnitude slower.  Use the compiled 'xla' fused backend "
+        "(fused_backend='xla' / --fused-backend xla, the CPU auto-dispatch "
+        f"default), or silence this by setting {INTERPRET_ENV}=1 "
+        "explicitly.",
+        RuntimeWarning, stacklevel=3,
+    )
+
+
+def resolve_interpret(interpret: bool | None = None, *,
+                      quiet: bool = False) -> bool:
+    """Resolve a kernel's interpret-mode flag (see module docstring).
+
+    ``quiet=True`` suppresses the silent-fallback warning/counter — for
+    *probes* (e.g. the executor's fused auto-dispatch asking "would Pallas
+    interpret here?") that make a decision rather than run a kernel.
+    """
     if interpret is not None:
         return bool(interpret)
     raw = os.environ.get(INTERPRET_ENV, "").strip().lower()
@@ -45,7 +84,10 @@ def resolve_interpret(interpret: bool | None = None) -> bool:
         raise ValueError(
             f"{INTERPRET_ENV}={raw!r} is not a recognized mode; use one of "
             f"{_TRUE + _FALSE} or 'auto'")
-    return jax.default_backend() == "cpu"
+    fallback = jax.default_backend() == "cpu"
+    if fallback and not quiet:
+        _note_interpret_fallback()
+    return fallback
 
 
 def note_trace(kernel: str) -> None:

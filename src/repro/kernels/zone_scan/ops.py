@@ -58,7 +58,7 @@ def scan_zones(
 
 
 def scan_flat(
-    u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
+    u, v, t, valid, zone_id, lo, hi, *, delta: int, l_max: int,
     blk: int = FUSED_BLK_DEFAULT, interpret: bool | None = None,
     with_ts: bool = False,
 ):
@@ -69,9 +69,10 @@ def scan_flat(
     raw ``(code int32[S, L], length int32[S])`` per candidate slot rather
     than a :class:`ZoneResult` — the flat stream has no zone axis.  With
     ``with_ts`` a third ``ts int32[S, l_max]`` array is appended.
+    ``lo``/``hi`` are the layout's per-candidate-block sweep bounds.
     """
     note_trace("zone_scan_flat")
     return fused_zone_scan_flat(
-        u, v, t, valid, zone_id, hi, delta=delta, l_max=l_max, blk=blk,
+        u, v, t, valid, zone_id, lo, hi, delta=delta, l_max=l_max, blk=blk,
         interpret=interpret, with_ts=with_ts,
     )

@@ -1,0 +1,194 @@
+"""Compiled XLA lowering of the fused flat zone scan.
+
+The third lowering of the Phase-1 transition rule — :func:`_edge_update`
+in :mod:`.zone_scan` stays the single copy of Definition 2-5 semantics,
+now shared by the dense Pallas kernel, the fused Pallas kernel, and this
+pure ``lax``-formulation.  It exists because every CPU CI box (and any
+host without a Triton/Mosaic lowering) previously ran the fused kernel
+through the Pallas *interpreter*, which is orders of magnitude slower
+than what XLA compiles from the same arithmetic.  The "xla" backend in
+:mod:`repro.core.backends` resolves its ``fused_loader`` here, and the
+executor's fused auto-dispatch prefers it over interpret-mode Pallas.
+
+The loop structure deliberately differs from the Pallas kernel's
+block-grid.  Sweeping each ``blk``-lane block over its whole ``[lo, hi)``
+window (the Pallas shape — VMEM-resident state, chunk-level skipping) is
+the wrong shape for XLA on CPU: a lane can only be extended by later
+slots of its OWN zone row, so a block window spanning many rows makes
+every lane re-inspect every cohabiting row's edges, and the per-op
+dispatch of a narrow sequential formulation eats whatever the chunk skip
+saves (measured: barely faster than the interpreter).  Instead:
+
+* each lane's row window ``[row_start, win_end)`` is derived ONCE from
+  the sorted ``zone_id`` stream (a ``cummax`` for row starts, a reverse
+  ``cummin`` for row ends — O(S) total), and ``win_end`` is clipped by
+  the lane's block descriptor ``hi`` so the host-planned live bounds
+  (Lemma 4.1 horizon cuts, ``bounds="live"``) directly shrink the trip
+  count; edges past the cut could only set ``done``, which never feeds
+  the outputs, so the clip is output-exact;
+* lanes are processed in **cache-sized segments** (``lax.map`` —
+  sequential, so one segment's state stays L2-resident instead of
+  streaming the whole ``[rows, S]`` state through memory every step);
+* within a segment every lane advances through its own row in
+  **lockstep**: step ``j`` applies slot ``row_start + j`` of each lane's
+  row as one wide ``_edge_update`` over the segment (per-lane edge
+  vectors broadcast through the rule exactly like the Pallas kernels'
+  scalars), for ``max(win_end - row_start)`` steps — the longest LIVE
+  row in the segment, not the stream length.  The bucketed layout
+  orders rows by capacity, so short-row segments take few steps instead
+  of being padded to the global maximum.
+
+The function is traceable; the executor jits it together with the
+on-device Phase-2 fold (``_mine_fused_jit``), so the compiled path has
+the identical launch/fold structure as the Pallas path — one executable,
+only the bounded count table leaving the device.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import encoding
+from repro.kernels.common import note_trace
+
+from .zone_scan import _edge_update
+
+#: target lanes per segment — state is ~(18..23) int32 rows x width, so
+#: 4096 lanes keep a segment's working set under ~0.5 MB (comfortably
+#: L2-resident; measured faster than 8192 on the 40k-edge sweep)
+_SEG_TARGET = 4096
+
+
+def _segment_width(n_blocks: int, blk: int) -> int:
+    """Largest ``blk`` multiple that divides the stream and fits cache."""
+    best = 1
+    for c in range(1, n_blocks + 1):
+        if n_blocks % c == 0 and c * blk <= max(_SEG_TARGET, blk):
+            best = c
+    return best * blk
+
+
+def fused_zone_scan_xla(
+    u, v, t, valid, zone_id, lo, hi, *, delta: int, l_max: int,
+    blk: int = 512, with_ts: bool = False,
+):
+    """Compiled single-launch ragged zone scan (same contract as
+    :func:`.zone_scan.fused_zone_scan_flat`, minus ``interpret``).
+
+    Args and returns are identical to the Pallas fused kernel: flat
+    ``int32[S]`` slot streams plus per-block ``[lo, hi)`` descriptors in,
+    ``(code int32[S, L], length int32[S][, ts int32[S, l_max]])`` out.
+    """
+    s_pad = u.shape[0]
+    if s_pad % blk:
+        raise ValueError(
+            f"flat slot count {s_pad} is not a multiple of blk {blk}")
+    n_blocks = s_pad // blk
+    if lo.shape[0] != n_blocks or hi.shape[0] != n_blocks:
+        raise ValueError(
+            f"descriptors (lo: {lo.shape[0]}, hi: {hi.shape[0]}) do not "
+            f"match {n_blocks} candidate blocks")
+    limbs = encoding.n_limbs(l_max)
+    k = l_max + 1
+
+    u_f = u.astype(jnp.int32)
+    v_f = v.astype(jnp.int32)
+    t_f = t.astype(jnp.int32)
+    valid_f = valid.astype(jnp.int32)
+    zid_f = zone_id.astype(jnp.int32)
+    hi_b = hi.astype(jnp.int32)
+
+    # per-lane row windows from the sorted zone_id stream: row_start via
+    # cummax over start markers, row_end as the next row's start via a
+    # reverse cummin; hi (blk-rounded >= every lane's horizon cut under
+    # "live", >= every row end under "full") clips the sweep
+    iota_s = jnp.arange(s_pad, dtype=jnp.int32)
+    is_start = jnp.concatenate([
+        jnp.ones(1, bool), zid_f[1:] != zid_f[:-1]])
+    row_start = jax.lax.cummax(jnp.where(is_start, iota_s, 0))
+    start_or_end = jnp.where(is_start, iota_s, s_pad)
+    row_end = jnp.concatenate([
+        jax.lax.cummin(start_or_end, reverse=True)[1:],
+        jnp.full(1, s_pad, jnp.int32)])
+    win_end = jnp.minimum(row_end, hi_b[iota_s // blk])
+
+    seg = _segment_width(n_blocks, blk)
+    n_seg = s_pad // seg
+    per_seg = lambda x: x.reshape(n_seg, seg)
+
+    iota_lane = jax.lax.broadcasted_iota(jnp.int32, (1, seg), 1)
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (k, seg), 0)
+    li_iota = jax.lax.broadcasted_iota(jnp.int32, (limbs, seg), 0)
+    iota_l = (jax.lax.broadcasted_iota(jnp.int32, (l_max, seg), 0)
+              if with_ts else None)
+    last_slot = jnp.int32(s_pad - 1)
+
+    def segment_fn(args):
+        base, l_zid, l_valid, l_rs, l_we = args
+        lane_idx = (iota_lane + base).reshape(1, seg)
+        rs = l_rs.reshape(1, seg)
+        we = l_we.reshape(1, seg)
+        zid_lane = l_zid.reshape(1, seg)
+
+        state0 = (
+            jnp.zeros((1, seg), jnp.int32),            # length
+            jnp.zeros((1, seg), jnp.int32),            # last_t
+            jnp.zeros((1, seg), bool),                 # done
+            jnp.zeros((1, seg), jnp.int32),            # n_nodes
+            jnp.full((k, seg), -1, jnp.int32),         # nodes
+            jnp.zeros((limbs, seg), jnp.int32),        # code
+        )
+        if with_ts:
+            state0 = state0 + (jnp.zeros((l_max, seg), jnp.int32),)  # ts
+
+        def body(j, s):
+            eidx = rs + j                              # [1, seg] per lane
+            in_win = eidx < we
+            safe = jnp.minimum(eidx, last_slot)[0]
+            evalid = in_win & (valid_f[safe] != 0)
+            return _edge_update(
+                s, u=u_f[safe], v=v_f[safe], t=t_f[safe],
+                seed=(lane_idx == eidx) & evalid,
+                gate=evalid & (zid_f[safe] == zid_lane),
+                delta=delta, l_max=l_max, iota_k=iota_k,
+                li_iota=li_iota, iota_l=iota_l,
+            )
+
+        # only lanes that can seed (their own slot is valid) drive the
+        # lockstep trip — pad rows would otherwise stretch it for pure
+        # no-op steps
+        trip = jnp.max(jnp.where(l_valid != 0,
+                                 jnp.maximum(l_we - l_rs, 0), 0))
+        state = jax.lax.fori_loop(0, trip, body, state0)
+        out = (state[5], state[0])                      # code, length
+        if with_ts:
+            out = out + (state[6],)
+        return out
+
+    bases = jnp.arange(n_seg, dtype=jnp.int32) * seg
+    outs = jax.lax.map(segment_fn, (
+        bases, per_seg(zid_f), per_seg(valid_f), per_seg(row_start),
+        per_seg(win_end),
+    ))
+    code = outs[0].transpose(0, 2, 1).reshape(s_pad, limbs)
+    length = outs[1].reshape(s_pad)
+    if with_ts:
+        return code, length, outs[2].transpose(0, 2, 1).reshape(s_pad, l_max)
+    return code, length
+
+
+def scan_flat_xla(
+    u, v, t, valid, zone_id, lo, hi, *, delta: int, l_max: int,
+    blk: int = 512, with_ts: bool = False,
+):
+    """The "xla" registry entry's ``fused_loader`` target.
+
+    Traceable (the executor jits it together with the on-device Phase-2
+    fold); same return contract as the Pallas ``ops.scan_flat``.
+    """
+    note_trace("zone_scan_flat_xla")
+    return fused_zone_scan_xla(
+        u, v, t, valid, zone_id, lo, hi, delta=delta, l_max=l_max, blk=blk,
+        with_ts=with_ts,
+    )

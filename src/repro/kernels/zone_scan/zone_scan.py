@@ -334,7 +334,7 @@ def zone_scan_pallas(
 
 
 def _fused_kernel(
-    hi_ref, u_ref, v_ref, t_ref, valid_ref, zid_ref,
+    lo_ref, hi_ref, u_ref, v_ref, t_ref, valid_ref, zid_ref,
     lane_t_ref, lane_valid_ref, lane_zid_ref,
     code_out_ref, len_out_ref, *maybe_ts_out_ref,
     delta: int, l_max: int, blk: int, with_ts: bool,
@@ -343,8 +343,11 @@ def _fused_kernel(
 
     Grid is 1-D over candidate blocks; the flat edge arrays arrive whole
     (constant index map) and are chunk-loaded with dynamic slices, so the
-    sweep span ``[base, hi)`` can differ per block — that is what makes
-    the ragged layout a *single* launch.  Candidate state is a pure
+    host-planned sweep span ``[lo, hi)`` can differ per block — that is
+    what makes the ragged layout a *single* launch.  ``lo`` is the block's
+    own base for live blocks (the sweep must pass over each lane's own
+    slot to seed it) and equals ``hi`` for dead blocks (no valid lanes:
+    zero chunks, outputs stay the zero init).  Candidate state is a pure
     ``fori_loop`` carry: no scratch persists across grid steps, so the
     kernel has no sequential-grid requirement.
     """
@@ -353,6 +356,7 @@ def _fused_kernel(
     limbs = code_out_ref.shape[0]
     k = l_max + 1
 
+    lo = lo_ref[0, 0]                       # blk-aligned sweep start
     hi = hi_ref[0, 0]                       # blk-aligned sweep end
     lane_t = lane_t_ref[...]                # [1, blk] seed times
     lane_valid = lane_valid_ref[...] != 0
@@ -378,7 +382,7 @@ def _fused_kernel(
         state0 = state0 + (jnp.zeros((l_max, blk), jnp.int32),)  # ts
 
     def chunk_body(ci, state):
-        off = base + ci * blk
+        off = lo + ci * blk
         cu = u_ref[0, pl.ds(off, blk)]
         cv = v_ref[0, pl.ds(off, blk)]
         ct = t_ref[0, pl.ds(off, blk)]
@@ -411,9 +415,10 @@ def _fused_kernel(
 
     # index skip is structural: the sweep starts at this block's own base
     # (edges before a candidate's seed slot can never extend it — within a
-    # zone they are not strictly later in time), and ends at the last
-    # lane's zone end.
-    n_chunks = (hi - base) // blk
+    # zone they are not strictly later in time), and ends at the host-
+    # planned ``hi`` (zone end, or the Lemma-4.1 horizon cut when the
+    # layout carries compacted bounds).  Dead blocks have lo == hi.
+    n_chunks = (hi - lo) // blk
     state = jax.lax.fori_loop(0, n_chunks, chunk_body, state0)
     code_out_ref[...] = state[5]
     len_out_ref[...] = state[0]
@@ -422,7 +427,7 @@ def _fused_kernel(
 
 
 def fused_zone_scan_flat(
-    u, v, t, valid, zone_id, hi, *, delta: int, l_max: int,
+    u, v, t, valid, zone_id, lo, hi, *, delta: int, l_max: int,
     blk: int = 512, interpret: bool | None = None, with_ts: bool = False,
 ):
     """Single-launch ragged zone scan over a concatenated flat slot stream.
@@ -435,9 +440,12 @@ def fused_zone_scan_flat(
       valid: int32/bool[S] — real-edge mask (padding slots are 0).
       zone_id: int32[S] — owning zone row per slot (-1 for stream pad);
         gates extensions/seeds/time-outs to same-zone edges.
-      hi: int32[S // blk] — per candidate block, the blk-aligned flat
-        index one past the last zone any of its lanes belongs to (the
-        block's sweep bound).
+      lo, hi: int32[S // blk] — per candidate block, the blk-aligned
+        host-planned sweep window ``[lo, hi)``: ``lo`` is the block's own
+        base (``lo == hi`` for dead blocks), ``hi`` one past the last
+        slot that can still affect any lane — the end of the last zone a
+        lane belongs to, optionally tightened to the Lemma-4.1 time
+        horizon (``bounds="live"`` in ``concat_layout``).
 
     Returns:
       (code int32[S, L], length int32[S]) per seed candidate slot, plus
@@ -449,16 +457,17 @@ def fused_zone_scan_flat(
         raise ValueError(
             f"flat slot count {s_pad} is not a multiple of blk {blk}")
     n_blocks = s_pad // blk
-    if hi.shape[0] != n_blocks:
+    if lo.shape[0] != n_blocks or hi.shape[0] != n_blocks:
         raise ValueError(
-            f"descriptor hi has {hi.shape[0]} entries for {n_blocks} "
-            f"candidate blocks")
+            f"descriptors (lo: {lo.shape[0]}, hi: {hi.shape[0]}) do not "
+            f"match {n_blocks} candidate blocks")
     limbs = encoding.n_limbs(l_max)
 
     valid_i = valid.astype(jnp.int32)
     row = lambda x: x.reshape(1, s_pad)
     u2, v2, t2 = row(u), row(v), row(t)
     valid2, zid2 = row(valid_i), row(zone_id)
+    lo2 = lo.reshape(1, n_blocks)
     hi2 = hi.reshape(1, n_blocks)
 
     whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
@@ -479,6 +488,7 @@ def fused_zone_scan_flat(
         kernel,
         grid=(n_blocks,),
         in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, i)),     # lo descriptor
             pl.BlockSpec((1, 1), lambda i: (0, i)),     # hi descriptor
             whole((1, s_pad)),                          # u (full stream)
             whole((1, s_pad)),                          # v
@@ -492,7 +502,7 @@ def fused_zone_scan_flat(
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(hi2, u2, v2, t2, valid2, zid2, t2, valid2, zid2)
+    )(lo2, hi2, u2, v2, t2, valid2, zid2, t2, valid2, zid2)
 
     code, length = outs[0], outs[1]
     if with_ts:

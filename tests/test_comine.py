@@ -128,7 +128,8 @@ def test_discover_many_matches_independent(backend, layout):
             f"diverged from independent discover"
     exec_stats = results[0].layout["execution"]
     assert exec_stats["n_configs"] == 4
-    assert exec_stats["path"] in ("per-bucket-multi", "fused-multi")
+    assert exec_stats["path"] in ("per-bucket-multi", "fused-multi",
+                                  "fused_xla-multi")
     assert eng.stats.discover_many_calls == 1
     assert eng.stats.comined_configs == 4
 
@@ -152,10 +153,13 @@ def test_discover_many_fused_single_launch():
     eng = PTMTEngine(cfgs[0])
     results = eng.discover_many(g, cfgs)
     exec_stats = results[0].layout["execution"]
-    assert exec_stats["path"] == "fused-multi"
+    assert exec_stats["path"] in ("fused-multi", "fused_xla-multi")
     assert exec_stats["launches"] == 1
     for cfg, res in zip(cfgs, results):
         assert res.counts == PTMTEngine(cfg).discover(g).counts
+        ref_cfg = cfg.with_updates(backend="ref", fused="auto",
+                                   fused_backend="auto")
+        assert res.counts == PTMTEngine(ref_cfg).discover(g).counts
 
 
 def test_discover_many_mixed_lattices_and_order():

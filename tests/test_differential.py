@@ -3,7 +3,9 @@
 Every graph here flows through the complete ``plan_zones ->
 build_zone_batch -> MiningExecutor.run`` pipeline for every backend
 (``ref`` jnp reference, ``numpy`` brute-force oracle, ``pallas`` kernel —
-interpret mode on CPU) and every aggregation configuration (chunked vs
+interpret mode on CPU; the fused tests additionally sweep the compiled
+``xla`` lowering against the interpreted Pallas one) and every
+aggregation configuration (chunked vs
 unchunked, legacy whole-batch vs hierarchical bounded-carry vs pipelined),
 and all results must agree code-for-code — with the standalone oracle as
 ground truth whenever the batch is exact (``overflow == 0``).
@@ -272,22 +274,28 @@ def test_layout_overflow_names_offending_bucket():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.parametrize("fused_backend,want_path",
+                         [("pallas", "fused"), ("xla", "fused_xla")])
 @pytest.mark.parametrize("layout", ["dense", "bucketed"])
-def test_fused_matches_per_bucket_and_oracle(layout):
+def test_fused_matches_per_bucket_and_oracle(layout, fused_backend,
+                                             want_path):
     """run_layout(fused=True) — one bucket-native launch with the Phase-2
     fold on-device — must be code-for-code identical to the per-bucket
     path and the standalone numpy oracle, on the >= 3-bucket power-law
-    corpus (interpret mode on CPU)."""
+    corpus, for BOTH fused lowerings (Pallas interpret on CPU, and the
+    compiled xla formulation of the same ``_edge_update`` rule)."""
     g = _powerlaw_bursty(seed=5)
     delta, l_max = 12, 3
     plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
     lay = tzp.build_zone_layout(g, plan, layout=layout)
     if layout == "bucketed":
         assert lay.n_buckets >= 3, lay.bucket_shapes()
-    ex = MiningExecutor(delta=delta, l_max=l_max, backend="pallas")
+    ex = MiningExecutor(delta=delta, l_max=l_max, backend="pallas",
+                        fused_backend=fused_backend)
     fused_out = ex.run_layout(lay, fused=True)
     fused = _dict(fused_out.counts)
-    assert fused_out.stats["path"] == "fused"
+    assert fused_out.stats["path"] == want_path
+    assert fused_out.stats["backend"] == fused_backend
     assert fused_out.stats["launches"] == 1
     pb_out = ex.run_layout(lay, fused=False)
     per_bucket = _dict(pb_out.counts)
@@ -298,7 +306,78 @@ def test_fused_matches_per_bucket_and_oracle(layout):
     assert fused == expect, "fused != oracle"
 
 
-def test_fused_survives_tiny_merge_cap_retry():
+@pytest.mark.parametrize("bounds", ["full", "live"])
+def test_fused_xla_matches_pallas_interpret_byte_identical(bounds):
+    """The compiled xla lowering == pallas-interpret == ref == numpy on
+    the power-law bursty corpus, under BOTH sweep-bound plans — and the
+    live plan dispatches strictly less modeled sweep work."""
+    g = _powerlaw_bursty(seed=5)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    results = {}
+    for fb in ("pallas", "xla"):
+        ex = MiningExecutor(delta=delta, l_max=l_max, backend="pallas",
+                            fused_backend=fb, fused_bounds=bounds)
+        out = ex.run_layout(lay, fused=True)
+        assert out.stats["bounds"] == bounds
+        results[fb] = _dict(out.counts)
+    assert results["xla"] == results["pallas"]
+    for backend in ("ref", "numpy"):
+        ex = MiningExecutor(delta=delta, l_max=l_max, backend=backend)
+        assert results["xla"] == _dict(
+            ex.run_layout(lay, fused=False).counts), backend
+    if bounds == "live":
+        # never MORE work than the full plan...
+        full = tzp.concat_layout(lay, blk=512)
+        live = tzp.concat_layout(lay, blk=512, delta=delta, l_max=l_max,
+                                 bounds="live")
+        assert live.sweep_slots <= full.sweep_slots
+        # ...and strictly less on a corpus whose zone time spans exceed
+        # the Lemma-4.1 horizon (this one's zones all fit inside it, so
+        # the cut cannot bite there)
+        from repro.data import synthetic_graphs as sg
+
+        gappy = sg.bursty_stream(2_500, 250, burst_size=120, burst_span=200,
+                                 gap_span=30_000, seed=13)
+        gplan = tzp.plan_zones(gappy, delta=90, l_max=5, omega=2)
+        glay = tzp.build_zone_layout(gappy, gplan, layout="bucketed")
+        gfull = tzp.concat_layout(glay, blk=512)
+        glive = tzp.concat_layout(glay, blk=512, delta=90, l_max=5,
+                                  bounds="live")
+        assert glive.sweep_slots < gfull.sweep_slots
+
+
+def test_fused_compacted_bounds_identical_at_kernel_level():
+    """Host-planned [lo, hi) compaction is output-exact at the raw kernel
+    level: full == live slot streams, slot for slot, on both lowerings."""
+    import jax.numpy as jnp
+
+    from repro.kernels.zone_scan import ops, xla
+
+    g = _powerlaw_bursty(seed=8, n=160)
+    delta, l_max = 12, 3
+    plan = tzp.plan_zones(g, delta=delta, l_max=l_max, omega=2)
+    lay = tzp.build_zone_layout(g, plan, layout="bucketed")
+    outs = {}
+    for bounds in ("full", "live"):
+        fl = tzp.concat_layout(lay, blk=64, delta=delta, l_max=l_max,
+                               bounds=bounds)
+        args = tuple(jnp.asarray(x) for x in
+                     (fl.u, fl.v, fl.t, fl.valid, fl.zone_id, fl.lo, fl.hi))
+        outs[bounds, "xla"] = xla.scan_flat_xla(
+            *args, delta=delta, l_max=l_max, blk=64, with_ts=True)
+        outs[bounds, "pallas"] = ops.scan_flat(
+            *args, delta=delta, l_max=l_max, blk=64, interpret=True,
+            with_ts=True)
+    base = outs["full", "pallas"]
+    for key, got in outs.items():
+        for a, b in zip(base, got):
+            assert np.array_equal(np.asarray(a), np.asarray(b)), key
+
+
+@pytest.mark.parametrize("fused_backend", ["pallas", "xla"])
+def test_fused_survives_tiny_merge_cap_retry(fused_backend):
     """The on-device bounded fold spills exactly and the host retry with a
     doubled cap must converge to exact counts from any starting cap."""
     g = _powerlaw_bursty(seed=8, n=160)
@@ -307,7 +386,7 @@ def test_fused_survives_tiny_merge_cap_retry():
     lay = tzp.build_zone_layout(g, plan, layout="bucketed")
     base = MiningExecutor(delta=delta, l_max=l_max, backend="pallas")
     tiny = MiningExecutor(delta=delta, l_max=l_max, backend="pallas",
-                          merge_cap=8)
+                          fused_backend=fused_backend, merge_cap=8)
     with pytest.warns(RuntimeWarning, match="fused on-device merge spilled"):
         outcome = tiny.run_layout(lay, fused=True)
     got = _dict(outcome.counts)
@@ -317,8 +396,9 @@ def test_fused_survives_tiny_merge_cap_retry():
 
 
 def test_fused_dispatch_policy():
-    """"auto" fuses exactly when the backend has a flat kernel; forcing
-    fused on a backend without one is an error, not a silent fallback."""
+    """"auto" fuses exactly when the resolved fused backend has a flat
+    kernel; forcing fused with none available is an error, not a silent
+    fallback; fused_backend reroutes (and validates) the lowering."""
     kw = dict(delta=12, l_max=3)
     assert MiningExecutor(backend="pallas", **kw).resolve_fused() is True
     assert MiningExecutor(backend="ref", **kw).resolve_fused() is False
@@ -331,6 +411,25 @@ def test_fused_dispatch_policy():
         MiningExecutor(backend="ref", fused="on", **kw).resolve_fused()
     with pytest.raises(ValueError, match="unknown fused mode"):
         MiningExecutor(backend="ref", fused="always", **kw)
+    # an explicit fused_backend opens the fused path from ANY backend...
+    rx = MiningExecutor(backend="ref", fused_backend="xla", **kw)
+    assert rx.resolve_fused() is True
+    assert rx._fused_spec().name == "xla"
+    # ...but must itself publish a flat kernel
+    with pytest.raises(ValueError, match="no fused single-launch scan"):
+        MiningExecutor(backend="pallas", fused_backend="ref", **kw)
+    with pytest.raises(ValueError, match="unknown fused bounds"):
+        MiningExecutor(backend="pallas", fused_bounds="tight", **kw)
+    # on CPU (every CI host) the pallas kernel would interpret, so auto
+    # dispatch must reroute fused runs to the compiled xla lowering
+    import jax
+
+    if jax.default_backend() == "cpu":
+        auto = MiningExecutor(backend="pallas", **kw)
+        assert auto._fused_spec().name == "xla"
+        pinned = MiningExecutor(backend="pallas", fused_backend="pallas",
+                                **kw)
+        assert pinned._fused_spec().name == "pallas"
 
 
 def test_fused_engine_single_launch_and_cache():
@@ -342,7 +441,7 @@ def test_fused_engine_single_launch_and_cache():
     g = _powerlaw_bursty(seed=5)
     eng = PTMTEngine(delta=12, l_max=3, omega=2, backend="pallas")
     res = eng.discover(g)
-    assert res.layout["execution"]["path"] == "fused"
+    assert res.layout["execution"]["path"] in ("fused", "fused_xla")
     assert res.layout["execution"]["launches"] == 1
     assert eng.stats.fused_runs == 1
     assert eng.stats.launches == 1

@@ -98,7 +98,7 @@ def test_fused_flat_kernel_matches_ref(layout, blk):
     lay = tzp.build_zone_layout(g, plan, layout=layout)
     fl = tzp.concat_layout(lay, blk=blk)
     code, length = ops.scan_flat(fl.u, fl.v, fl.t, fl.valid, fl.zone_id,
-                                 fl.hi, delta=60, l_max=4, blk=blk)
+                                 fl.lo, fl.hi, delta=60, l_max=4, blk=blk)
     a = ref.scan_flat_ref(fl.u, fl.v, fl.t, fl.valid, fl.zone_id,
                           delta=60, l_max=4)
     np.testing.assert_array_equal(np.asarray(code), a.code)
@@ -111,6 +111,7 @@ def test_fused_flat_kernel_all_pad_stream():
     zeros = jnp.zeros(s, jnp.int32)
     code, length = ops.scan_flat(
         zeros, zeros, zeros, zeros, jnp.full(s, -1, jnp.int32),
-        jnp.asarray([s], jnp.int32), delta=5, l_max=3, blk=128)
+        jnp.asarray([0], jnp.int32), jnp.asarray([s], jnp.int32),
+        delta=5, l_max=3, blk=128)
     assert not np.asarray(length).any()
     assert not np.asarray(code).any()

@@ -364,6 +364,13 @@ def test_concurrent_tenants_threaded():
         if inst.name in ("repro_serving_query_latency_ms",
                          "repro_serving_query_first_call_ms"))
     assert recorded == sum(n_queries.values())
+    # settle one warm query per tenant: under an unlucky schedule every
+    # query above raced an ingest (each saw a freshly invalidated index,
+    # so every observation landed in first_call) and the steady-state
+    # histogram would not exist yet
+    for name in graphs:
+        service.query(QueryRequest(session=name, op="level_histogram"))
+        service.query(QueryRequest(session=name, op="level_histogram"))
     # exports render after concurrent mutation
     snap = obs.metrics.snapshot()
     assert any(c["name"] == "test_hammer_total" for c in snap["counters"])

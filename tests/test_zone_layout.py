@@ -26,6 +26,20 @@ from repro.core import (
 from repro.core.temporal_graph import TemporalGraph, from_edges
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _fresh_jit_caches():
+    """The mesh tests below compile large SPMD (shard_map) executables;
+    at the tail of a full-suite run the jit caches hold every executable
+    the preceding ~300 tests compiled, and that accumulated state has
+    been observed to push the XLA:CPU compiler into a segfault on this
+    module's first shard_map compile (jax 0.4.37 — the same test passes
+    in isolation and after either suite half alone).  Every test here
+    compiles its own executables anyway, so start from a clean cache."""
+    import jax
+
+    jax.clear_caches()
+
+
 def _skewed_graph(seed=0, n=300, nodes=10):
     """Bursts of very different sizes + quiet gaps: >= 3 buckets."""
     rng = np.random.default_rng(seed)
